@@ -1,0 +1,61 @@
+"""Beyond-paper ablation — look-ahead depth k.
+
+Algorithm 1 picks k ≈ t_p/t_d per iteration. This ablation forces fixed k
+values and compares against the adaptive choice, quantifying both ends the
+paper argues qualitatively (§4.2–4.3): k too small leaves decode bubbles
+during prefill (throughput loss); k too large runs decode past the prefill
+chunk (TBT fine, but the prefill stream idles and TTFT suffers).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import TPU_V5E
+from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.core.partition import PartitionConfig, ScheduleDecision
+from repro.serving.scheduler import DuetPolicy
+from repro.serving.simulator import (InstanceSim, SimConfig,
+                                     kv_capacity_tokens, make_duet_instance)
+from repro.serving.traces import synth_trace
+from benchmarks.common import DEFAULT_ARCH, emit
+
+
+class FixedKDuetPolicy(DuetPolicy):
+    def __init__(self, mux, fixed_k: int, **kw):
+        super().__init__(mux, **kw)
+        self.fixed_k = fixed_k
+
+    def schedule(self, state):
+        plan = super().schedule(state)
+        if plan.mode == "duet":
+            p = plan.decision.partition
+            plan.k = self.fixed_k
+            plan.decision = ScheduleDecision(
+                mode="duet", t_mixed=plan.decision.t_mixed,
+                partition=PartitionConfig(
+                    s_prefill=p.s_prefill, s_decode=p.s_decode,
+                    k=self.fixed_k, t_prefill=p.t_prefill,
+                    t_decode=p.t_decode, throughput=p.throughput))
+        return plan
+
+
+def run(quick: bool = True):
+    cfg = get_config(DEFAULT_ARCH)
+    sim = SimConfig(units=4, tp=4, tbt_slo=0.05)
+    reqs = synth_trace("mooncake", 80 if quick else 200, qps=1.2, seed=0)
+    cap = kv_capacity_tokens(cfg, TPU_V5E, sim.units)
+
+    for k in (1, 4, 16, 64):
+        mux = AdaptiveMultiplexer(cfg, total_units=sim.units,
+                                  tbt_slo=sim.tbt_slo, tp=sim.tp)
+        pol = FixedKDuetPolicy(mux, fixed_k=k, token_budget=8192,
+                               kv_capacity_tokens=cap)
+        m = InstanceSim(cfg, pol, sim).run(reqs).summary()
+        emit(f"ablation_k{k}_req_per_s", m["request_throughput"],
+             f"ttft={m['mean_ttft_s']:.2f}s tbt={m['mean_tbt_s']*1e3:.0f}ms")
+    m = make_duet_instance(cfg, sim).run(reqs).summary()
+    emit("ablation_k_adaptive_req_per_s", m["request_throughput"],
+         f"ttft={m['mean_ttft_s']:.2f}s tbt={m['mean_tbt_s']*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: CSV emission, instance factories."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Iterable
+
+from repro.configs import get_config
+from repro.serving.simulator import (DisaggSim, SimConfig,
+                                     make_baseline_instance,
+                                     make_duet_instance)
+
+DEFAULT_ARCH = "qwen3-4b"   # the paper's model class (Qwen3 family)
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    """Scaffold contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{value:.4f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def sweep_policies(cfg, reqs, sim: SimConfig, policies=("duet", "vllm",
+                                                        "sglang-default",
+                                                        "sglang-chunked"),
+                   token_budget: int = 8192):
+    rows = {}
+    for p in policies:
+        if p == "duet":
+            inst = make_duet_instance(cfg, sim, token_budget=token_budget)
+        else:
+            inst = make_baseline_instance(cfg, sim, p,
+                                          token_budget=token_budget)
+        rows[p] = inst.run(reqs).summary()
+    return rows

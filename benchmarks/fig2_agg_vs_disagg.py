@@ -1,0 +1,37 @@
+"""Paper Fig. 2 — PD-aggregated (2 replicas, round-robin) vs PD-disaggregated
+(1P+1D) under the official-demo workload (ISL=8000, OSL=200), QPS sweep.
+
+Expected qualitative reproduction (Obs. 3): disaggregation holds TBT flat but
+its TTFT explodes at lower QPS and total token throughput falls well below
+aggregation, because a single prefill worker is the bottleneck.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serving.simulator import (ClusterSim, DisaggSim, SimConfig,
+                                     make_baseline_instance)
+from repro.serving.traces import synthetic_fixed
+from benchmarks.common import DEFAULT_ARCH, emit
+
+
+def run(quick: bool = True):
+    cfg = get_config(DEFAULT_ARCH)
+    n_req = 60 if quick else 200
+    qps_list = (0.5, 1.0, 2.0, 3.0) if quick else (0.5, 1, 2, 3, 4, 5)
+    for qps in qps_list:
+        reqs = synthetic_fixed(n_req, qps=qps, isl=8000, osl=200, seed=0)
+        agg = ClusterSim(lambda i: make_baseline_instance(
+            cfg, SimConfig(units=1, tp=1), "vllm"), n=2).run(reqs).summary()
+        dis = DisaggSim(cfg, SimConfig(units=1, tp=1)).run(reqs).summary()
+        emit(f"fig2_agg_ttft_s_qps{qps}", agg["mean_ttft_s"])
+        emit(f"fig2_agg_tbt_ms_qps{qps}", agg["mean_tbt_s"] * 1e3)
+        emit(f"fig2_agg_tokens_per_s_qps{qps}",
+             agg["total_token_throughput"])
+        emit(f"fig2_disagg_ttft_s_qps{qps}", dis["mean_ttft_s"])
+        emit(f"fig2_disagg_tbt_ms_qps{qps}", dis["mean_tbt_s"] * 1e3)
+        emit(f"fig2_disagg_tokens_per_s_qps{qps}",
+             dis["total_token_throughput"])
+
+
+if __name__ == "__main__":
+    run(quick=False)

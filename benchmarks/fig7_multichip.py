@@ -1,0 +1,31 @@
+"""Paper Fig. 7 — multi-chip (TP=2) end-to-end on Azure-Code: DuetServe-TP2
+vs vLLM-TP2, SGLang-TP2 variants, and Dynamo-style 1P+1D disaggregation over
+the same two chips. The roofline communication operator (ring AllReduce over
+ICI) is active here."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serving.simulator import DisaggSim, SimConfig
+from repro.serving.traces import synth_trace
+from benchmarks.common import DEFAULT_ARCH, emit, sweep_policies
+
+
+def run(quick: bool = True):
+    cfg = get_config(DEFAULT_ARCH)
+    n_req = 120 if quick else 400
+    qps_list = (3.0, 6.0) if quick else (2.0, 4.0, 6.0, 8.0)
+    for qps in qps_list:
+        reqs = synth_trace("azure-code", n_req, qps=qps, seed=0)
+        sim2 = SimConfig(units=2, tp=2, tbt_slo=0.1)
+        rows = sweep_policies(cfg, reqs, sim2)
+        rows["dynamo-1p1d"] = DisaggSim(
+            cfg, SimConfig(units=1, tp=1)).run(reqs).summary()
+        for pol, m in rows.items():
+            emit(f"fig7_{pol}_ttft_s_qps{qps}", m["mean_ttft_s"])
+            emit(f"fig7_{pol}_tbt_ms_qps{qps}", m["mean_tbt_s"] * 1e3,
+                 f"p99={m['p99_tbt_s'] * 1e3:.0f}ms")
+            emit(f"fig7_{pol}_req_per_s_qps{qps}", m["request_throughput"])
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,51 @@
+"""Paper Fig. 9 — static SM partitioning vs DuetServe's adaptive scheduling.
+
+Static splits (the paper's Sd22-Sp44 / Sd33-Sp33 / Sd44-Sp22 on 66 TPCs map
+to decode shares 1/3, 1/2, 2/3 of the partitionable units) always run duet
+mode with a fixed allocation; DuetServe re-optimises every iteration and
+falls back to aggregated execution when there is no contention."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import TPU_V5E
+from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.serving.scheduler import DuetPolicy
+from repro.serving.simulator import (InstanceSim, SimConfig,
+                                     kv_capacity_tokens, make_duet_instance)
+from repro.serving.traces import synth_trace
+from benchmarks.common import DEFAULT_ARCH, emit
+
+UNITS = 64  # grid granularity of the single-chip engine partition
+
+
+def make_static_instance(cfg, sim: SimConfig, s_d: int) -> InstanceSim:
+    cap = kv_capacity_tokens(cfg, TPU_V5E, sim.units)
+    mux = AdaptiveMultiplexer(cfg, total_units=sim.units, tbt_slo=sim.tbt_slo,
+                              tp=sim.tp, granularity=UNITS)
+    policy = DuetPolicy(mux, static_partition=(UNITS - s_d, s_d),
+                        token_budget=8192, kv_capacity_tokens=cap)
+    return InstanceSim(cfg, policy, sim)
+
+
+def run(quick: bool = True):
+    cfg = get_config(DEFAULT_ARCH)
+    n_req = 120 if quick else 300
+    sim = SimConfig(units=1, tp=1, tbt_slo=0.1)
+    traces = ("azure-conv",) if quick else ("azure-code", "azure-conv",
+                                            "mooncake")
+    qps = {"azure-code": 3.0, "azure-conv": 6.0, "mooncake": 0.6}
+    for trace in traces:
+        reqs = synth_trace(trace, n_req, qps=qps[trace], seed=0)
+        for share, name in ((UNITS // 3, "Sd1/3"), (UNITS // 2, "Sd1/2"),
+                            (2 * UNITS // 3, "Sd2/3")):
+            m = make_static_instance(cfg, sim, share).run(reqs).summary()
+            emit(f"fig9_{trace}_static_{name}_req_per_s",
+                 m["request_throughput"],
+                 f"tbt={m['mean_tbt_s'] * 1e3:.0f}ms")
+        m = make_duet_instance(cfg, sim).run(reqs).summary()
+        emit(f"fig9_{trace}_duet_adaptive_req_per_s",
+             m["request_throughput"], f"tbt={m['mean_tbt_s'] * 1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    run(quick=False)

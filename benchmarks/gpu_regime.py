@@ -1,0 +1,94 @@
+"""Paper-faithful GPU-regime validation (the reproduction BASELINE).
+
+Before evaluating the TPU adaptation, this validates DuetServe's own claims
+in the paper's own regime: Qwen3-8B on one H100-class device, 66 TPC
+partition units, the PROFILED hardware curves (≈40% GEMM MFU at the 8192
+budget — calibrated so an 8192-token iteration costs ~180 ms, matching
+Fig. 1b — and the superlinear HBM-bandwidth-vs-SM curve of Fig. 3a,
+20% of SMs -> ~60% of bandwidth).
+
+Reproduction targets (EXPERIMENTS.md §Claims):
+  * mixed 8192-budget iterations violate a 100 ms TBT SLO (Obs. 1)
+  * duet bounds p99 TBT near the SLO while vLLM-style aggregation blows
+    past it (Fig. 6)
+  * request-throughput gain appears under load and grows with
+    prefill-heaviness, approaching the paper's 1.3x on Mooncake (Fig. 6)
+  * gains shrink as the workload becomes decode-dominant (Table 2)
+
+The TPU-regime runs (fig6/7, table2/3 with TPU_V5E) then quantify what the
+chip-granular adaptation keeps: the SLO guarantee at ~0–6% throughput cost —
+the co-execution *throughput* bonus is GPU-specific (shared-HBM superlinear
+bandwidth; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.roofline import H100_LIKE, RequestLoad, RooflineModel
+from repro.serving.simulator import (SimConfig, make_baseline_instance,
+                                     make_duet_instance)
+from repro.serving.traces import synth_trace, synthetic_fixed
+from benchmarks.common import emit
+
+# profiled-throughput derate: 8192-token budget iteration ~ 180 ms (Fig. 1b)
+H100_SIM = dataclasses.replace(H100_LIKE,
+                               peak_flops=H100_LIKE.peak_flops * 0.40,
+                               hbm_bw=H100_LIKE.hbm_bw * 0.8)
+HBM_PER_UNIT = 80e9 / 66
+
+
+def _sim(slo=0.1):
+    return SimConfig(units=66, tp=1, tbt_slo=slo, hbm_per_unit=HBM_PER_UNIT)
+
+
+def run(quick: bool = True):
+    cfg = get_config("qwen3-8b")
+
+    # Obs. 1: full-budget mixed iteration violates the SLO
+    rf = RooflineModel(cfg, H100_SIM)
+    t_budget = rf.iteration_latency(
+        [RequestLoad(q=8192, c=0, phase="prefill")], units=66)
+    emit("gpu_regime_8192_budget_iteration_ms", t_budget * 1e3,
+         "paper Fig.1b: >180ms on H100")
+    assert t_budget > 0.1
+
+    cases = [("mooncake", 1.6), ("azure-code", 3.2)]
+    if not quick:
+        cases += [("mooncake", 0.8), ("mooncake", 1.2), ("azure-conv", 8.0)]
+    for trace, qps in cases:
+        reqs = synth_trace(trace, 120 if quick else 300, qps=qps, seed=0)
+        di = make_duet_instance(cfg, _sim(), hw=H100_SIM, unit_step=2)
+        d = di.run(reqs).summary()
+        v = make_baseline_instance(cfg, _sim(), "vllm",
+                                   hw=H100_SIM).run(reqs).summary()
+        gain = d["request_throughput"] / max(v["request_throughput"], 1e-9)
+        emit(f"gpu_regime_{trace}_qps{qps}_duet_req_per_s",
+             d["request_throughput"],
+             f"tbt={d['mean_tbt_s']*1e3:.0f}ms "
+             f"p99={d['p99_tbt_s']*1e3:.0f}ms "
+             f"duet_frac={di.policy.mux.stats.duet_fraction:.2f}")
+        emit(f"gpu_regime_{trace}_qps{qps}_vllm_req_per_s",
+             v["request_throughput"],
+             f"tbt={v['mean_tbt_s']*1e3:.0f}ms "
+             f"p99={v['p99_tbt_s']*1e3:.0f}ms")
+        emit(f"gpu_regime_{trace}_qps{qps}_throughput_gain", gain,
+             "paper: up to 1.3x (Mooncake)")
+
+    # Table 2 trend in the GPU regime
+    for isl, osl, qps in ((4096, 64, 4.0), (4096, 1024, 2.5),
+                          (4096, 2048, 1.6)):
+        reqs = synthetic_fixed(100 if quick else 200, qps=qps, isl=isl,
+                               osl=osl, seed=0)
+        d = make_duet_instance(cfg, _sim(), hw=H100_SIM,
+                               unit_step=2).run(reqs).summary()
+        v = make_baseline_instance(cfg, _sim(), "vllm",
+                                   hw=H100_SIM).run(reqs).summary()
+        emit(f"gpu_regime_table2_osl{osl}_p99_tbt_ratio",
+             v["p99_tbt_s"] / max(d["p99_tbt_s"], 1e-9),
+             f"duet p99={d['p99_tbt_s']*1e3:.0f}ms "
+             f"vllm p99={v['p99_tbt_s']*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,162 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch × shape × mesh) from the dry-run records in results/dryrun*.jsonl.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() reports PER-DEVICE flops/bytes (calibrated against known
+matmuls — see EXPERIMENTS.md §Dry-run), so chips-normalisation is already
+applied; collective bytes are summed over the whole program per device.
+MODEL_FLOPS = 6·N(_active)·D tokens gives the useful-work ratio (remat and
+expert/capacity overhead show up as HLO/model > 1).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.core.roofline import RequestLoad, RooflineModel, TPU_V5E
+from repro.models.params import count_params_analytical, tp_adjusted_config
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def shape_loads(shape_name: str):
+    s = SHAPES[shape_name]
+    if s.kind in ("train", "prefill"):
+        return [RequestLoad(q=s.seq_len, c=0, phase="prefill")
+                for _ in range(s.global_batch)]
+    return [RequestLoad(q=1, c=s.seq_len) for _ in range(s.global_batch)]
+
+
+def analytic_terms(arch: str, shape_name: str, chips: int) -> dict:
+    """Per-device analytical roofline terms from the §4.1 operator census
+    (the TPU-fused counterpart of the HLO upper bounds: XLA-CPU
+    bytes_accessed counts every unfused intermediate, which a TPU keeps in
+    VMEM, so HLO memory terms are upper bounds — see EXPERIMENTS.md)."""
+    s = SHAPES[shape_name]
+    cfg = tp_adjusted_config(get_config(arch), 16)
+    m = RooflineModel(cfg, TPU_V5E,
+                      sliding_window=cfg.sliding_window if s.sliding
+                      and not cfg.is_recurrent else None)
+    reqs = shape_loads(shape_name)
+    n = sum(r.q for r in reqs)
+    q = np.asarray([r.q for r in reqs])
+    c = np.asarray([r.c for r in reqs])
+    F = B = 0.0
+    for kind in cfg.block_pattern:
+        tok = m._block_token_cost(kind, n)
+        Fs, Bs = m._block_seq_cost_vec(kind, q, c)
+        F += tok.flops + float(Fs.sum())
+        B += tok.bytes + float(Bs.sum())
+    mult = 3.0 if s.kind == "train" else 1.0   # fwd+bwd ~ 3x fwd
+    return {"t_compute": mult * F / chips / TPU_V5E.peak_flops,
+            "t_memory": mult * B / chips / TPU_V5E.hbm_bw}
+
+
+def tokens_of(shape_name: str, entry: str) -> int:
+    s = SHAPES[shape_name]
+    if entry == "train":
+        return s.global_batch * s.seq_len
+    if entry == "prefill":
+        return s.global_batch * s.seq_len
+    return s.global_batch  # decode: one token per sequence
+
+
+def analyse(rec: dict) -> dict:
+    if "error" in rec:
+        return rec
+    hw = TPU_V5E
+    chips = rec["num_devices"]
+    # cost_analysis is per-device
+    t_compute = rec["flops"] / hw.peak_flops
+    t_memory = rec["bytes_accessed"] / hw.hbm_bw
+    t_coll = rec["collectives"]["total"] / (hw.ici_bw * hw.ici_links)
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    cfg = get_config(rec["arch"])
+    n_active = count_params_analytical(cfg, active_only=True)
+    toks = tokens_of(rec["shape"], rec["entry"])
+    factor = 6.0 if rec["entry"] == "train" else 2.0
+    model_flops_per_device = factor * n_active * toks / chips
+    useful = model_flops_per_device / max(rec["flops"], 1)
+    ana = analytic_terms(rec["arch"], rec["shape"], chips)
+    terms_a = {"compute": ana["t_compute"], "memory": ana["t_memory"],
+               "collective": t_coll}
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "entry": rec["entry"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "t_compute_analytic_s": ana["t_compute"],
+        "t_memory_analytic_s": ana["t_memory"],
+        "dominant_analytic": max(terms_a, key=terms_a.get),
+        "model_flops_ratio": useful,
+        "hbm_args_gb": (rec["memory"].get("argument_size_in_bytes") or 0)
+        / 1e9,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def load(path: str):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | mesh | dom(HLO) | HLO comp s | HLO mem s | "
+           "coll s | dom(analytic) | ana comp s | ana mem s | "
+           "model/HLO flops | args GB/dev |")
+    sep = "|" + "---|" * 12
+    lines = [hdr, sep]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | {r['error'][:60]} | | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['dominant']}"
+            f" | {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['dominant_analytic']}** | "
+            f"{r['t_compute_analytic_s']:.2e} | "
+            f"{r['t_memory_analytic_s']:.2e} | "
+            f"{r['model_flops_ratio']:.2f} | {r['hbm_args_gb']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True, path: str | None = None):
+    from benchmarks.common import emit
+    paths = [path] if path else [
+        os.path.join(RESULTS, "dryrun.jsonl"),
+        os.path.join(RESULTS, "dryrun_mp.jsonl"),
+    ]
+    all_rows = []
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        for rec in load(p):
+            r = analyse(rec)
+            all_rows.append(r)
+            if "error" not in r:
+                emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_"
+                     f"{r['dominant']}",
+                     max(r['t_compute_s'], r['t_memory_s'],
+                         r['t_collective_s']) * 1e3,
+                     f"useful={r['model_flops_ratio']:.2f}")
+    if not all_rows:
+        print("# no dryrun records found — run python -m repro.launch.dryrun"
+              " --all first", file=sys.stderr)
+    return all_rows
+
+
+if __name__ == "__main__":
+    rows = run(quick=False)
+    print(markdown_table(rows))

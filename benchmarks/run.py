@@ -1,0 +1,51 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (quick mode by default; each module's
+``__main__`` runs the full sweep). See EXPERIMENTS.md for recorded results.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (ablation_lookahead, fig1_saturation,
+                            fig2_agg_vs_disagg, fig3_partition_scaling,
+                            fig6_end_to_end, fig7_multichip,
+                            fig8_roofline_accuracy, fig9_static_partition,
+                            fig10_breakdown, gpu_regime, roofline_table,
+                            table2_sensitivity, table3_cluster)
+    suites = [
+        ("gpu_regime", gpu_regime),
+        ("fig1", fig1_saturation),
+        ("fig2", fig2_agg_vs_disagg),
+        ("fig3", fig3_partition_scaling),
+        ("fig6", fig6_end_to_end),
+        ("fig7", fig7_multichip),
+        ("fig8", fig8_roofline_accuracy),
+        ("fig9", fig9_static_partition),
+        ("fig10", fig10_breakdown),
+        ("ablation_k", ablation_lookahead),
+        ("table2", table2_sensitivity),
+        ("table3", table3_cluster),
+        ("roofline", roofline_table),
+    ]
+    failures = []
+    for name, mod in suites:
+        t0 = time.time()
+        print(f"# --- {name} ---")
+        try:
+            mod.run(quick=True)
+        except Exception as e:  # noqa: BLE001 — report, keep the suite going
+            failures.append((name, e))
+            print(f"# {name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

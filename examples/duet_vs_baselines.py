@@ -1,0 +1,47 @@
+"""Compare DuetServe against vLLM-like / SGLang-like / disaggregated serving
+on a production-scale workload (roofline-oracle simulation, TPU v5e
+constants) — a runnable miniature of the paper's Fig. 6.
+
+Run:  PYTHONPATH=src python examples/duet_vs_baselines.py [--trace mooncake]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.serving.simulator import (DisaggSim, SimConfig,
+                                     make_baseline_instance,
+                                     make_duet_instance)
+from repro.serving.traces import TRACES, synth_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="azure-conv", choices=list(TRACES))
+    ap.add_argument("--qps", type=float, default=6.0)
+    ap.add_argument("--num-requests", type=int, default=200)
+    ap.add_argument("--units", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-4b")
+    sim = SimConfig(units=args.units, tp=args.units, tbt_slo=0.1)
+    reqs = synth_trace(args.trace, args.num_requests, args.qps, seed=0)
+
+    print(f"{'system':18s} {'req/s':>7s} {'TTFT s':>8s} {'TBT ms':>8s} "
+          f"{'p99 TBT':>8s}")
+    duet_inst = make_duet_instance(cfg, sim)
+    rows = [("duetserve", duet_inst.run(reqs).summary())]
+    for kind in ("vllm", "sglang-default", "sglang-chunked"):
+        rows.append((kind, make_baseline_instance(cfg, sim,
+                                                  kind).run(reqs).summary()))
+    rows.append(("disagg-1p1d", DisaggSim(
+        cfg, SimConfig(units=args.units, tp=args.units)).run(reqs).summary()))
+    for name, m in rows:
+        print(f"{name:18s} {m['request_throughput']:7.2f} "
+              f"{m['mean_ttft_s']:8.3f} {m['mean_tbt_s']*1e3:8.1f} "
+              f"{m['p99_tbt_s']*1e3:8.1f}")
+    st = duet_inst.policy.mux.stats
+    print(f"\nduet iterations: {st.duet_iterations}/{st.iterations} "
+          f"({100*st.duet_fraction:.1f}% spatially multiplexed)")
+
+
+if __name__ == "__main__":
+    main()

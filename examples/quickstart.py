@@ -1,0 +1,61 @@
+"""Quickstart: the DuetServe pipeline in ~60 lines.
+
+1. pick an architecture config (reduced so it runs on CPU)
+2. build the model, init params
+3. predict an iteration with the attention-aware roofline (paper §4.1)
+4. ask Algorithm 1 for a partition when the SLO is threatened (§4.2)
+5. serve a few real requests end to end through the engine (§4.3)
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import RequestLoad, RooflineModel, TPU_V5E, decide
+from repro.models import Model
+from repro.serving import DuetEngine, EngineConfig, Request
+
+
+def main():
+    # -- 1/2: model ---------------------------------------------------------
+    cfg = reduced(get_config("qwen3-4b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} layers={cfg.num_layers} d_model={cfg.d_model}")
+
+    # -- 3: roofline prediction (full-size config, TPU v5e constants) -------
+    full = get_config("qwen3-4b")
+    rf = RooflineModel(full, TPU_V5E)
+    mixed = [RequestLoad(q=8192, c=0, phase="prefill")] + \
+        [RequestLoad(q=1, c=4096) for _ in range(64)]
+    t = rf.iteration_latency(mixed, units=8)
+    print(f"predicted mixed-iteration latency on 8 chips: {t*1e3:.1f} ms")
+
+    # -- 4: Algorithm 1 -----------------------------------------------------
+    d = decide(rf, mixed[:1], mixed[1:], total_units=8, tbt_slo=0.05)
+    print(f"decision: {d.mode}", end="")
+    if d.partition:
+        p = d.partition
+        print(f"  (S_p={p.s_prefill}, S_d={p.s_decode}, k={p.k}, "
+              f"t_d={p.t_decode*1e3:.1f}ms <= 50ms SLO)")
+    else:
+        print()
+
+    # -- 5: serve real requests --------------------------------------------
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=0.02 * i,
+                    prompt_len=int(rng.integers(24, 96)),
+                    output_len=6) for i in range(5)]
+    eng = DuetEngine(model, params, EngineConfig(
+        max_slots=4, max_len=256, token_budget=64))
+    eng.submit(reqs)
+    metrics = eng.run().summary()
+    print(f"served {metrics['num_finished']} requests | "
+          f"TTFT {metrics['mean_ttft_s']*1e3:.1f} ms | "
+          f"TBT {metrics['mean_tbt_s']*1e3:.2f} ms")
+    print("first request tokens:", reqs[0].output_tokens)
+
+
+if __name__ == "__main__":
+    main()

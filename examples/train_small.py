@@ -1,0 +1,54 @@
+"""Train a ~100M-class model for a few hundred steps on CPU (deliverable b).
+
+Uses the real training substrate: packed synthetic LM data, AdamW with the
+arch's schedule (WSD for minicpm), gradient clipping, checkpointing. The
+same train_step lowers on the production mesh in launch/dryrun.py.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data import data_iterator
+from repro.models import Model
+from repro.training import AdamWConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=384)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), num_layers=args.layers,
+                  d_model=args.d_model, vocab=4096)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, schedule="
+          f"{cfg.lr_schedule}")
+
+    data = data_iterator(cfg, seq_len=args.seq, batch_size=args.batch,
+                         seed=0)
+    opt = AdamWConfig(lr=6e-4, schedule=cfg.lr_schedule,
+                      warmup_steps=max(10, args.steps // 20),
+                      total_steps=args.steps)
+    params, _, history = train(model, params, data, opt,
+                               num_steps=args.steps, log_every=20,
+                               checkpoint_path=args.ckpt,
+                               checkpoint_every=args.steps // 2)
+    first, last = history[0][1], history[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

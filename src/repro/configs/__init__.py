@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, get_config, list_configs, reduced, register
+from repro.configs.shapes import SHAPES, InputShape, get_shape, input_specs
+
+__all__ = [
+    "ArchConfig", "get_config", "list_configs", "reduced", "register",
+    "SHAPES", "InputShape", "get_shape", "input_specs",
+]

@@ -1,0 +1,94 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Four shapes from the assignment:
+
+  train_4k       seq_len=  4,096  global_batch= 256  (training)      -> train_step
+  prefill_32k    seq_len= 32,768  global_batch=  32  (prefill)       -> prefill_step
+  decode_32k     seq_len= 32,768  global_batch= 128  (decode)        -> decode_step
+  long_500k      seq_len=524,288  global_batch=   1  (long decode)   -> decode_step
+
+Decode shapes lower ``decode_step`` — ONE new token against a KV cache of
+``seq_len``. ``long_500k`` uses the sub-quadratic variant: sliding-window
+ring-buffer cache for attention archs, O(1) recurrent state for SSM/hybrid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+    sliding: bool = False  # use the sub-quadratic sliding-window/state variant
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode", sliding=True),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+# ----------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                kv_dtype=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this entry point.
+
+    No device allocation — these feed ``jax.jit(...).lower(**specs)``.
+    Modality frontends are stubbed per the assignment carve-out: for VLM the
+    vision patch embeddings arrive precomputed, for audio the codebook token
+    grid stands in for EnCodec output.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    specs: dict = {}
+    if shape.kind == "train":
+        if cfg.frontend == "vision":
+            p = cfg.num_prefix_tokens
+            specs["patch_embeds"] = sds((B, p, cfg.d_model), bf16)
+            specs["tokens"] = sds((B, S - p), i32)
+            specs["labels"] = sds((B, S - p), i32)
+        elif cfg.frontend == "audio":
+            specs["tokens"] = sds((B, cfg.num_codebooks, S), i32)
+            specs["labels"] = sds((B, cfg.num_codebooks, S), i32)
+        else:
+            specs["tokens"] = sds((B, S), i32)
+            specs["labels"] = sds((B, S), i32)
+    elif shape.kind == "prefill":
+        if cfg.frontend == "vision":
+            p = cfg.num_prefix_tokens
+            specs["patch_embeds"] = sds((B, p, cfg.d_model), bf16)
+            specs["tokens"] = sds((B, S - p), i32)
+        elif cfg.frontend == "audio":
+            specs["tokens"] = sds((B, cfg.num_codebooks, S), i32)
+        else:
+            specs["tokens"] = sds((B, S), i32)
+    elif shape.kind == "decode":
+        if cfg.frontend == "audio":
+            specs["token"] = sds((B, cfg.num_codebooks, 1), i32)
+        else:
+            specs["token"] = sds((B, 1), i32)
+        specs["pos"] = sds((B,), i32)
+        from repro.models.transformer import cache_specs
+        specs["cache"] = cache_specs(
+            cfg, batch=B, max_len=S, dtype=kv_dtype or bf16,
+            sliding=shape.sliding)
+    else:
+        raise ValueError(shape.kind)
+    return specs

@@ -1,0 +1,40 @@
+"""zamba2-1.2b [hybrid] — 38L d_model=2048 32H (kv=32) d_ff=8192 ssm_state=64
+vocab=32000. Mamba2 backbone + one weight-SHARED attention+MLP block invoked
+periodically [arXiv:2411.15242].
+
+The backbone is 38 Mamba2 (SSD) blocks; every ``shared_attn_period``-th
+position additionally applies the single shared transformer block (same
+parameters at every occurrence — Zamba2's signature weight sharing).
+Simplification noted in DESIGN.md: Zamba2 concatenates the original embedding
+with the hidden state at shared-block inputs and uses per-occurrence LoRA
+deltas; we apply the shared block directly on the residual stream.
+"""
+from repro.configs.base import ArchConfig, register
+
+
+def _pattern(num_layers: int, period: int):
+    pat = []
+    for i in range(num_layers):
+        if i % period == period - 1:
+            pat.append("shared_attn")
+        else:
+            pat.append("mamba2")
+    return tuple(pat)
+
+
+CONFIG = register(ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    shared_attn_period=6,
+    block_pattern=_pattern(38, 6),
+))

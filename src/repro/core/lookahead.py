@@ -1,0 +1,82 @@
+"""Interruption-free look-ahead decode execution — paper §4.3, TPU-native.
+
+On GPU the paper records decode into CUDA Graphs and replays k of them
+back-to-back without host synchronisation, with KV slots and metadata for all
+k steps preallocated. The JAX analogue is *stronger*: the k-step loop is
+compiled *inside* one jitted program via ``lax.scan`` — a single dispatch
+covers k decode iterations, zero host round-trips between steps (DESIGN.md
+§2). The planner half (slot preallocation) lives in the serving engine's KV
+manager; this module provides the fused multi-step decode program plus
+greedy/temperature sampling inside the loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def _sample(logits: jax.Array, key: jax.Array, temperature: float):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, logits.shape) + 1e-9) + 1e-9)
+    return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)
+
+
+def lookahead_decode(model: Model, params, cache, first_token: jax.Array,
+                     start_pos: jax.Array, k: int, *,
+                     key: Optional[jax.Array] = None,
+                     temperature: float = 0.0,
+                     sliding: bool = False,
+                     active_mask: Optional[jax.Array] = None):
+    """Run ``k`` decode steps without host synchronisation.
+
+    Args:
+      first_token: (B, 1) int32 — token to feed at the first step.
+      start_pos: (B,) int32 — cache position of the first step per request
+        (continuous batching: requests sit at different depths).
+      active_mask: (B,) bool — inactive slots keep their state frozen
+        (position not advanced) so retired slots don't corrupt the cache.
+
+    Returns: (tokens (B, k), cache, new_pos (B,)).
+    """
+    B = first_token.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if active_mask is None:
+        active_mask = jnp.ones((B,), bool)
+
+    def step(carry, step_key):
+        tok, pos, cache = carry
+        logits, new_cache = model.decode_step(params, cache, tok, pos,
+                                              sliding=sliding)
+        nxt = _sample(logits, step_key, temperature)[:, None]
+        nxt = jnp.where(active_mask[:, None], nxt, tok)
+        new_pos = jnp.where(active_mask, pos + 1, pos)
+        # freeze cache updates for inactive slots is implicit: their written
+        # slot is overwritten identically next step (pos unchanged).
+        return (nxt, new_pos, new_cache), nxt[:, 0]
+
+    keys = jax.random.split(key, k)
+    (last, pos, cache), toks = jax.lax.scan(
+        step, (first_token, start_pos, cache), keys)
+    return toks.T, cache, pos
+
+
+def make_lookahead_fn(model: Model, k: int, *, temperature: float = 0.0,
+                      sliding: bool = False):
+    """jit-compiled k-step decode program (one per k — the engine caches
+    these exactly like the paper caches one CUDA Graph per batch shape)."""
+    fn = functools.partial(lookahead_decode, model, k=k,
+                           temperature=temperature, sliding=sliding)
+
+    @jax.jit
+    def run(params, cache, first_token, start_pos, key, active_mask):
+        return fn(params, cache, first_token, start_pos, key=key,
+                  active_mask=active_mask)
+
+    return run

@@ -1,0 +1,108 @@
+"""Adaptive multiplexing controller — ties the roofline predictor (§4.1) and
+the partition optimizer (§4.2) into the per-iteration decision the DuetServe
+scheduler consumes: *aggregated* execution by default, *duet* (spatially
+multiplexed) execution only when a TBT violation is predicted.
+
+The controller also owns the profiled Π(S)/B(S) tables. The paper profiles
+these with microbenchmarks at engine start; here they are analytic TPU curves
+(linear per chip — DESIGN.md §2), but the table indirection is kept so a real
+deployment can drop in measured values.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ArchConfig
+from repro.core.partition import ScheduleDecision, decide
+from repro.core.roofline import (HardwareSpec, RequestLoad, RooflineModel,
+                                 TPU_V5E)
+
+
+@dataclass
+class MultiplexerStats:
+    iterations: int = 0
+    duet_iterations: int = 0
+    aggregated_iterations: int = 0
+    predicted_violations: int = 0
+
+    @property
+    def duet_fraction(self) -> float:
+        return self.duet_iterations / max(1, self.iterations)
+
+
+class AdaptiveMultiplexer:
+    """Per-iteration mode decision for one engine replica.
+
+    Args:
+      cfg: architecture being served.
+      hw: hardware spec (defaults to TPU v5e).
+      total_units: partitionable units available to this replica (chips in
+        its slice; 1 when the engine runs a single chip and partitioning
+        happens at kernel-grid granularity — see kernels/duet_attention).
+      tbt_slo: decode TBT bound (s).
+      tp: tensor-parallel degree inside the replica.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, hw: HardwareSpec = TPU_V5E,
+                 total_units: int = 256, tbt_slo: float = 0.1, tp: int = 1,
+                 unit_step: int = 1, granularity: int = 64,
+                 sliding_window: Optional[int] = None,
+                 mla_absorb: bool = False):
+        self.cfg = cfg
+        self.hw = hw
+        self.total_units = total_units
+        self.tbt_slo = tbt_slo
+        self.unit_step = unit_step
+        self.model = RooflineModel(cfg, hw, tp=tp,
+                                   sliding_window=sliding_window,
+                                   mla_absorb=mla_absorb)
+        self.stats = MultiplexerStats()
+        # profiled partition curves (analytic on TPU; table kept for parity
+        # with the paper's init-time profiling step)
+        self.pi_table: Dict[int, float] = {
+            u: hw.pi(u) for u in range(1, total_units + 1)}
+        self.bw_table: Dict[int, float] = {
+            u: hw.bw(u) for u in range(1, total_units + 1)}
+        # grid-granularity variant: when the replica is one chip, Algorithm 1
+        # enumerates fused-kernel grid slots instead of chips.
+        self.granularity = granularity
+
+    # ------------------------------------------------------------------
+    def step(self, prefill_reqs: Sequence[RequestLoad],
+             decode_reqs: Sequence[RequestLoad]) -> ScheduleDecision:
+        units = self.total_units if self.total_units > 1 else self.granularity
+        scale = 1.0 if self.total_units > 1 else 1.0 / self.granularity
+        model = self.model
+        if self.total_units == 1:
+            # fractional-chip partitioning: express grid slots as fractional
+            # units of one chip so the same Algorithm 1 enumeration applies.
+            model = _FractionalModel(self.model, self.granularity)
+        decision = decide(model, prefill_reqs, decode_reqs, units,
+                          self.tbt_slo, unit_step=self.unit_step)
+        self.stats.iterations += 1
+        if decision.t_mixed > self.tbt_slo:
+            self.stats.predicted_violations += 1
+        if decision.mode == "duet":
+            self.stats.duet_iterations += 1
+        else:
+            self.stats.aggregated_iterations += 1
+        return decision
+
+    def predict_mixed(self, reqs: Sequence[RequestLoad]) -> float:
+        return self.model.iteration_latency(reqs, units=self.total_units)
+
+
+class _FractionalModel:
+    """Adapter: unit = 1/granularity of a chip (fused-kernel grid slots)."""
+
+    def __init__(self, base: RooflineModel, granularity: int):
+        self._base = base
+        self._g = granularity
+
+    def iteration_latency(self, reqs, units=None):
+        frac = 1.0 if units is None else units / self._g
+        return self._base.iteration_latency(reqs, units=frac)
+
+    def __getattr__(self, item):
+        return getattr(self._base, item)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import PackedLMDataset, data_iterator
+
+__all__ = ["PackedLMDataset", "data_iterator"]

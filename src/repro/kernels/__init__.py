@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the serving hot spots, each with a pure-jnp oracle
+in ref.py and a jit wrapper in ops.py (interpret=True off-TPU):
+
+  flash_prefill  — causal GQA flash attention (chunk-offset aware)
+  paged_decode   — decode attention over paged KV (block tables via scalar
+                   prefetch)
+  duet_attention — fused mixed-phase attention with grid interleaving (the
+                   paper's SM partition mapped to the TPU grid)
+"""
+from repro.kernels.ops import (DuetSchedule, build_duet_schedule,
+                               duet_attention, flash_prefill,
+                               pack_duet_queries, paged_decode,
+                               unpack_duet_output)
+
+__all__ = [
+    "DuetSchedule", "build_duet_schedule", "duet_attention", "flash_prefill",
+    "pack_duet_queries", "paged_decode", "unpack_duet_output",
+]

@@ -1,0 +1,131 @@
+"""Fused duet attention — DuetServe's SM-partitioned concurrent
+prefill+decode execution, adapted to the TPU grid (DESIGN.md §2).
+
+On GPU the paper binds the prefill and decode streams to disjoint SM sets via
+libsmctrl. A TPU TensorCore executes one kernel's grid sequentially, so the
+within-chip analogue of spatial multiplexing is *grid interleaving*: a single
+``pallas_call`` processes both phases' attention tiles, and the tile ORDER
+(built by ``ops.build_duet_schedule`` from the Algorithm-1 ratio) interleaves
+decode tiles among prefill tiles so decode tokens complete early in the
+launch instead of queueing behind the whole prefill — bounding TBT exactly
+the way the SM partition does, without a second kernel launch.
+
+Work items are *rows*: a decode row is one request's single query token; a
+prefill row is one query position of the chunk being prefilled. Rows are
+grouped into per-slot tiles of ``block_q`` rows over the engine's slab cache
+(Ns, S, G, Dh); scalar-prefetched tile descriptors drive the BlockSpec index
+maps (tile -> slab slot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tile_slot_ref, q_ref, pos_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_q: int, block_k: int, rep: int,
+            sm_scale: float):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                        # (block_q, H, Dh)
+    k = k_ref[0]                          # (block_k, G, Dh)
+    v = v_ref[0]
+    bq, H, Dh = q.shape
+    G = k.shape[1]
+
+    qg = q.reshape(bq, G, rep, Dh)
+    # scores (G, bq, rep, block_k): contract Dh, batch over G
+    s = jax.lax.dot_general(
+        qg.transpose(1, 0, 2, 3).reshape(G, bq * rep, Dh), k.transpose(1, 0, 2),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).reshape(G, bq, rep, -1)
+    s = s * sm_scale
+
+    pos = pos_ref[...][:, 0]              # (bq,)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (G, bq, rep, block_k), 3)
+    row_pos = pos[None, :, None, None]
+    valid = (k_pos <= row_pos) & (row_pos >= 0) \
+        & (tile_slot_ref[t] >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(
+        p.reshape(G, bq * rep, -1).astype(v.dtype), v.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).reshape(G, bq, rep, Dh)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        out = (acc_ref[...] / denom)                  # (G, bq, rep, Dh)
+        o_ref[...] = out.transpose(1, 0, 2, 3).reshape(bq, H, Dh).astype(
+            o_ref.dtype)
+
+
+def duet_attention(q, row_pos, tile_slot, k_slab, v_slab, *,
+                   block_q: int = 8, block_k: int = 128,
+                   interpret: bool = False):
+    """Fused mixed-phase attention.
+
+    Args:
+      q:         (T*block_q, H, Dh) query rows, tile-grouped. Tile t's rows
+                 all target slab slot ``tile_slot[t]`` (host groups + pads).
+      row_pos:   (T*block_q, 1) int32 absolute position per row (-1 = pad row).
+      tile_slot: (T,) int32 slab slot per tile (-1 = pad tile). The ORDER of
+                 tiles is the duet schedule (decode tiles interleaved).
+      k_slab/v_slab: (Ns, S, G, Dh) engine slab KV (chunk K/V pre-written).
+    Returns (T*block_q, H, Dh).
+    """
+    R, H, Dh = q.shape
+    Ns, S, G, _ = k_slab.shape
+    T = tile_slot.shape[0]
+    assert R == T * block_q and H % G == 0 and S % block_k == 0
+    rep = H // G
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               rep=rep, sm_scale=1.0 / (Dh ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(T, S // block_k),
+            in_specs=[
+                pl.BlockSpec((block_q, H, Dh), lambda t, j, ts: (t, 0, 0)),
+                pl.BlockSpec((block_q, 1), lambda t, j, ts: (t, 0)),
+                pl.BlockSpec((1, block_k, G, Dh),
+                             lambda t, j, ts: (jnp.maximum(ts[t], 0), j, 0, 0)),
+                pl.BlockSpec((1, block_k, G, Dh),
+                             lambda t, j, ts: (jnp.maximum(ts[t], 0), j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_q, H, Dh),
+                                   lambda t, j, ts: (t, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, block_q, rep), jnp.float32),
+                pltpu.VMEM((G, block_q, rep), jnp.float32),
+                pltpu.VMEM((G, block_q, rep, Dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, H, Dh), q.dtype),
+        interpret=interpret,
+    )(tile_slot.astype(jnp.int32), q, row_pos.astype(jnp.int32), k_slab,
+      v_slab)
+    return out

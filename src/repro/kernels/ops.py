@@ -1,0 +1,148 @@
+"""jit'd public wrappers for the Pallas kernels + the duet schedule builder.
+
+``interpret`` defaults to True off-TPU so the kernels validate on CPU
+(the assignment's kernel-validation mode); on a TPU backend they compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import duet_attention as _duet
+from repro.kernels import flash_prefill as _flash
+from repro.kernels import paged_decode as _paged
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("q_offset", "kv_len", "block_q",
+                                             "block_k", "interpret"))
+def flash_prefill(q, k, v, *, q_offset: int = 0, kv_len=None,
+                  block_q: int = 128, block_k: int = 128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash.flash_prefill(q, k, v, q_offset=q_offset, kv_len=kv_len,
+                                block_q=block_q, block_k=block_k,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode(q, k_pages, v_pages, tables, lengths, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged.paged_decode(q, k_pages, v_pages, tables, lengths,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def duet_attention(q, row_pos, tile_slot, k_slab, v_slab, *,
+                   block_q: int = 8, block_k: int = 128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _duet.duet_attention(q, row_pos, tile_slot, k_slab, v_slab,
+                                block_q=block_q, block_k=block_k,
+                                interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Duet schedule builder (host side)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DuetSchedule:
+    """Tile layout for one fused duet launch.
+
+    ``order`` maps kernel tile index -> (kind, original index) for unpacking;
+    decode tiles are interleaved among prefill tiles at the Algorithm-1 ratio
+    so they retire early in the grid (the TBT guarantee)."""
+    tile_slot: np.ndarray            # (T,) int32
+    row_slot: np.ndarray             # (T*bq,) int32 (-1 pad)
+    row_pos: np.ndarray              # (T*bq,) int32 (-1 pad)
+    row_src: np.ndarray              # (T*bq,) int32 index into the packed
+    # source row list (-1 pad), used to scatter kernel output back
+    num_decode_tiles: int
+    num_prefill_tiles: int
+
+
+def build_duet_schedule(decode_rows: Sequence[Tuple[int, int]],
+                        prefill_rows: Sequence[Tuple[int, int]],
+                        *, block_q: int = 8,
+                        decode_share: float = 0.25) -> DuetSchedule:
+    """Group rows into per-slot tiles and interleave the two phases.
+
+    Args:
+      decode_rows: [(slot, pos)] one per active decode request.
+      prefill_rows: [(slot, pos)] one per query position of the prefill chunk.
+      decode_share: S_d / (S_d + S_p) from the partition optimizer — sets the
+        interleave ratio (a decode tile is placed after every
+        ``(1-share)/share`` prefill tiles).
+    Rows are indexed in the order given: row_src refers to
+    list(decode_rows) + list(prefill_rows).
+    """
+    def tiles_for(rows, base):
+        by_slot: dict = {}
+        for i, (slot, pos) in enumerate(rows):
+            by_slot.setdefault(slot, []).append((base + i, pos))
+        tiles = []
+        for slot, items in sorted(by_slot.items()):
+            for off in range(0, len(items), block_q):
+                chunk = items[off:off + block_q]
+                tiles.append((slot, chunk))
+        return tiles
+
+    d_tiles = tiles_for(decode_rows, 0)
+    p_tiles = tiles_for(prefill_rows, len(decode_rows))
+
+    # interleave: after every `stride` prefill tiles, insert one decode tile
+    order: List[Tuple[int, list]] = []
+    if not p_tiles:
+        order = d_tiles
+    elif not d_tiles:
+        order = p_tiles
+    else:
+        stride = max(1, round((1.0 - decode_share) / max(decode_share, 1e-6)))
+        di, pi = 0, 0
+        while di < len(d_tiles) or pi < len(p_tiles):
+            if di < len(d_tiles):
+                order.append(d_tiles[di])
+                di += 1
+            take = min(stride, len(p_tiles) - pi)
+            order.extend(p_tiles[pi:pi + take])
+            pi += take
+
+    T = max(1, len(order))
+    tile_slot = np.full((T,), -1, np.int32)
+    row_slot = np.full((T * block_q,), -1, np.int32)
+    row_pos = np.full((T * block_q,), -1, np.int32)
+    row_src = np.full((T * block_q,), -1, np.int32)
+    for t, (slot, items) in enumerate(order):
+        tile_slot[t] = slot
+        for r, (src, pos) in enumerate(items):
+            row_slot[t * block_q + r] = slot
+            row_pos[t * block_q + r] = pos
+            row_src[t * block_q + r] = src
+    return DuetSchedule(tile_slot=tile_slot, row_slot=row_slot,
+                        row_pos=row_pos, row_src=row_src,
+                        num_decode_tiles=len(d_tiles),
+                        num_prefill_tiles=len(p_tiles))
+
+
+def pack_duet_queries(schedule: DuetSchedule, src_q: jax.Array) -> jax.Array:
+    """Scatter packed source query rows (Nsrc, H, Dh) into tile layout."""
+    idx = jnp.asarray(np.maximum(schedule.row_src, 0))
+    q = src_q[idx]
+    return jnp.where((schedule.row_src >= 0)[:, None, None], q, 0.0)
+
+
+def unpack_duet_output(schedule: DuetSchedule, out: jax.Array,
+                       num_src: int) -> jax.Array:
+    """Gather kernel output rows back to packed source order (Nsrc, H, Dh)."""
+    res = jnp.zeros((num_src,) + out.shape[1:], out.dtype)
+    valid = schedule.row_src >= 0
+    return res.at[jnp.asarray(schedule.row_src[valid])].set(
+        out[jnp.asarray(np.where(valid)[0])])

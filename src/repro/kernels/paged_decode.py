@@ -1,0 +1,110 @@
+"""Paged decode-attention kernel (Pallas TPU).
+
+One new query token per request attends over its paged KV cache
+(PagedAttention layout: pages (N, page_size, G, Dh) + per-request block
+tables). The grid walks (request, page-block); block tables arrive as scalar
+prefetch so the BlockSpec index maps gather the right page for each step —
+the TPU version of the GPU kernel's pointer-chasing, with HBM→VMEM page
+copies driven by the prefetched indices.
+
+Memory-bound by design (the decode phase of the paper's Fig. 3c): per grid
+step the kernel moves one KV page through VMEM and does rank-1 compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size: int, rep: int,
+            sm_scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (H, Dh)
+    k = k_ref[0]                       # (page_size, G, Dh)
+    v = v_ref[0]
+    H, Dh = q.shape
+    G = k.shape[1]
+
+    qg = q.reshape(G, rep, Dh)
+    # scores (G, rep, page_size)
+    s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale
+
+    tok = pi * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (G, rep, page_size), 2)
+    valid = tok < lengths_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    # pv: (G, rep, Dh)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                             (((2,), (0,)), ((0,), (1,))),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(pi == pl.num_programs(1) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).reshape(H, Dh).astype(o_ref.dtype)
+
+
+def paged_decode(q, k_pages, v_pages, tables, lengths, *,
+                 interpret: bool = False):
+    """q (B,H,Dh); k/v_pages (N,ps,G,Dh); tables (B,P) int32 page ids;
+    lengths (B,) int32 true context lengths. Returns (B,H,Dh).
+
+    Unused table slots must point at a valid (e.g. null) page — they are
+    masked by ``lengths``.
+    """
+    B, H, Dh = q.shape
+    N, ps, G, _ = k_pages.shape
+    P = tables.shape[1]
+    assert H % G == 0
+    rep = H // G
+    kernel = functools.partial(_kernel, page_size=ps, rep=rep,
+                               sm_scale=1.0 / (Dh ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, P),
+            in_specs=[
+                pl.BlockSpec((1, H, Dh), lambda b, p, tbl, ln: (b, 0, 0)),
+                pl.BlockSpec((1, ps, G, Dh),
+                             lambda b, p, tbl, ln: (tbl[b, p], 0, 0, 0)),
+                pl.BlockSpec((1, ps, G, Dh),
+                             lambda b, p, tbl, ln: (tbl[b, p], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, Dh), lambda b, p, tbl, ln: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, rep), jnp.float32),
+                pltpu.VMEM((G, rep), jnp.float32),
+                pltpu.VMEM((G, rep, Dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages,
+      v_pages)
+    return out

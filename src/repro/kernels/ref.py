@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Shapes follow the kernel contracts:
+  flash_prefill : q (B,S,H,Dh), k/v (B,S,G,Dh), causal (+offset for chunks)
+  paged_decode  : q (B,H,Dh), pages (N,ps,G,Dh), tables (B,P), lengths (B,)
+  duet_attention: q rows (R,H,Dh) over a slot slab (Ns,S,G,Dh) with per-row
+                  slot ids and positions (mixed prefill rows + decode rows)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_probs(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+def flash_prefill_ref(q, k, v, *, q_offset: int = 0):
+    """Causal attention. q (B,Sq,H,Dh); k,v (B,Sk,G,Dh); queries start at
+    absolute position q_offset (chunked prefill)."""
+    B, Sq, H, Dh = q.shape
+    G = k.shape[2]
+    rep = H // G
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, :] <= qpos[:, None]
+    probs = _gqa_probs(scores, mask[None, None])
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pages, v_pages, tables, lengths):
+    """Decode attention over paged KV.
+    q (B,H,Dh); pages (N,ps,G,Dh); tables (B,P) int32; lengths (B,) int32."""
+    B, H, Dh = q.shape
+    N, ps, G, _ = k_pages.shape
+    P = tables.shape[1]
+    rep = H // G
+    k = k_pages[tables].reshape(B, P * ps, G, Dh)       # (B, L, G, Dh)
+    v = v_pages[tables].reshape(B, P * ps, G, Dh)
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bkhd->bhk", q, kr,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    mask = jnp.arange(P * ps)[None, :] < lengths[:, None]
+    probs = _gqa_probs(scores, mask[:, None, :])
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def duet_attention_ref(q, row_slot, row_pos, k_slab, v_slab):
+    """Fused mixed-phase attention over a slot slab.
+
+    q (R,H,Dh): query rows — decode rows (one per active decode request) and
+    prefill-chunk rows, in any interleaved order. row_slot (R,): slab slot of
+    each row. row_pos (R,): absolute position (attends to slab[slot, :pos+1]).
+    k_slab/v_slab (Ns,S,G,Dh): the engine's slab KV cache (chunk K/V already
+    written). Rows with row_slot < 0 are padding and produce zeros.
+    """
+    R, H, Dh = q.shape
+    Ns, S, G, _ = k_slab.shape
+    rep = H // G
+    slot = jnp.maximum(row_slot, 0)
+    k = jnp.repeat(k_slab[slot], rep, axis=2)           # (R,S,H,Dh)
+    v = jnp.repeat(v_slab[slot], rep, axis=2)
+    scores = jnp.einsum("rhd,rkhd->rhk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    mask = (jnp.arange(S)[None, :] <= row_pos[:, None]) \
+        & (row_slot >= 0)[:, None]
+    probs = _gqa_probs(scores, mask[:, None, :])
+    probs = jnp.where((row_slot >= 0)[:, None, None], probs, 0.0)
+    out = jnp.einsum("rhk,rkhd->rhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init). The 512 host devices exist ONLY for this dry-run process.
+
+DOC = """Multi-pod dry-run (deliverable e) and roofline extraction (deliverable g).
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real entry point — ``train_step`` for train_4k, ``prefill_step``
+for prefill_32k, ``decode_step`` for decode_32k/long_500k — against the
+production mesh with the per-arch shardings, then records:
+
+  * memory_analysis()  — per-device bytes (proves the config fits)
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline compute/memory
+                         terms
+  * collective bytes   — parsed from the compiled HLO (all-gather,
+                         all-reduce, reduce-scatter, all-to-all,
+                         collective-permute output sizes) for the
+                         collective term
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape decode_32k
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun_mp.jsonl
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, input_specs, list_configs
+from repro.configs.base import ASSIGNED_ARCHS
+from repro.configs.shapes import SHAPES, InputShape
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models.params import (abstract_params, param_shardings,
+                                 tp_adjusted_config)
+from repro.models.transformer import Model, cache_pspecs
+from repro.training.optimizer import AdamWConfig, init_adamw
+from repro.training.train_loop import make_train_step
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8": 1, "bf16": 2, "f16": 2,
+               "s16": 2, "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8,
+               "s64": 8, "u64": 8, "c64": 8, "c128": 16}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum output-tensor bytes of every collective op in the compiled HLO."""
+    out = {c: 0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^[%\w\.\-]+\s*=\s*(.+?)\s+(" + "|".join(COLLECTIVES)
+                     + r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if "-done(" in stripped:   # avoid double counting start/done pairs
+            continue
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(type_str):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[op] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def batch_shardings(cfg, shape: InputShape, mesh, specs: dict) -> dict:
+    dp = data_axes(mesh)
+    sh = {}
+    for name in specs:
+        if name == "cache":
+            sh[name] = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                cache_pspecs(cfg, mesh, shape.global_batch,
+                             sliding=shape.sliding),
+                is_leaf=lambda x: isinstance(x, P))
+        elif name == "pos":
+            sh[name] = NamedSharding(
+                mesh, P(dp if shape.global_batch > 1 else None))
+        else:
+            nd = specs[name].ndim
+            sh[name] = NamedSharding(
+                mesh, P(dp if shape.global_batch > 1 else None,
+                        *([None] * (nd - 1))))
+    return sh
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mla_absorb: bool = False, remat: bool = True,
+              kv_f8: bool = False, pad_experts: bool = False,
+              verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = tp_adjusted_config(get_config(arch), mesh.shape["model"],
+                             pad_experts=pad_experts)
+    model = Model(cfg, mla_absorb=mla_absorb, remat=remat)
+    params_abs = abstract_params(cfg, jnp.bfloat16)
+    params_sh = param_shardings(cfg, mesh)
+    specs = input_specs(cfg, shape,
+                        kv_dtype=jnp.float8_e4m3fn if kv_f8 else None)
+    in_sh = batch_shardings(cfg, shape, mesh, specs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(init_adamw, params_abs)
+        opt_sh = type(opt_abs)(step=NamedSharding(mesh, P()),
+                               mu=params_sh, nu=params_sh)
+        step = make_train_step(model, AdamWConfig())
+        args_sh = (params_sh, opt_sh,
+                   {k: in_sh[k] for k in specs})
+        lowered = jax.jit(step, in_shardings=args_sh,
+                          out_shardings=(params_sh, opt_sh, None)).lower(
+            params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        if "patch_embeds" in specs:
+            def prefill_step(params, tokens, patch_embeds):
+                return model.prefill(params, tokens,
+                                     patch_embeds=patch_embeds)
+            lowered = jax.jit(prefill_step, in_shardings=(
+                params_sh, in_sh["tokens"], in_sh["patch_embeds"])).lower(
+                params_abs, specs["tokens"], specs["patch_embeds"])
+        else:
+            def prefill_step(params, tokens):
+                return model.prefill(params, tokens)
+            lowered = jax.jit(prefill_step, in_shardings=(
+                params_sh, in_sh["tokens"])).lower(params_abs,
+                                                   specs["tokens"])
+    else:  # decode
+        sliding = shape.sliding and not cfg.is_recurrent
+
+        def decode_step(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos,
+                                     sliding=sliding)
+
+        lowered = jax.jit(decode_step,
+                          in_shardings=(params_sh, in_sh["cache"],
+                                        in_sh["token"], in_sh["pos"])).lower(
+            params_abs, specs["cache"], specs["token"], specs["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            mem_rec[attr] = getattr(mem, attr, None)
+    coll = collective_bytes(compiled.as_text())
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": mesh.devices.size,
+        "entry": shape.kind,
+        "mla_absorb": mla_absorb,
+        "kv_f8": kv_f8,
+        "pad_experts": pad_experts,
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "memory": mem_rec,
+        "collectives": coll,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(json.dumps(record))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--kv-f8", action="store_true")
+    ap.add_argument("--pad-experts", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    records = []
+    for arch, shape in combos:
+        try:
+            rec = lower_one(arch, shape, multi_pod=args.multi_pod,
+                            mla_absorb=args.mla_absorb, kv_f8=args.kv_f8,
+                            pad_experts=args.pad_experts,
+                            remat=not args.no_remat)
+        except Exception as e:  # noqa: BLE001 — a failed combo is a bug; record it
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            print(json.dumps(rec), file=sys.stderr)
+        records.append(rec)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    ok = sum(1 for r in records if "error" not in r)
+    print(f"# dry-run: {ok}/{len(records)} combos compiled",
+          file=sys.stderr)
+    return 0 if ok == len(records) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

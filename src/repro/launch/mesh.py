@@ -1,0 +1,61 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import
+and only then builds meshes.
+
+Axes:
+  single pod : (data=16, model=16)            — 256 chips (one v5e pod slice)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips
+
+``pod`` and ``data`` together carry data parallelism (batch sharding);
+``model`` carries tensor/expert parallelism per the per-arch rules in
+``repro.models.params``. The duet serving launcher additionally splits the
+``model`` axis into prefill/decode sub-meshes at the Algorithm-1 ratio
+(``split_duet_submeshes``) — the chip-granular analogue of the paper's SM
+partitioning.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2,
+                   pod: Optional[int] = None) -> Mesh:
+    """Small mesh over however many (host) devices the test session has."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def split_duet_submeshes(mesh: Mesh, decode_chips: int):
+    """Split the mesh's ``model`` axis into (prefill_mesh, decode_mesh).
+
+    The decode sub-mesh gets ``decode_chips`` columns of the model axis, the
+    prefill sub-mesh the rest — DuetServe's SM partition at chip granularity.
+    Both sub-meshes keep the full data/pod axes (each data shard splits its
+    model column group).
+    """
+    model_size = mesh.shape["model"]
+    assert 0 < decode_chips < model_size
+    devs = mesh.devices  # ndarray indexed by axis order
+    model_axis = list(mesh.axis_names).index("model")
+    dec = np.take(devs, range(model_size - decode_chips, model_size),
+                  axis=model_axis)
+    pre = np.take(devs, range(0, model_size - decode_chips), axis=model_axis)
+    return (Mesh(pre, mesh.axis_names), Mesh(dec, mesh.axis_names))

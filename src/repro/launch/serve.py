@@ -1,0 +1,67 @@
+"""Serving launcher: run the DuetServe engine on a trace (CLI).
+
+On a real TPU slice this process drives one replica; the duet decision is
+taken per iteration (core.multiplexer) and realised either at kernel-grid
+granularity (single chip — kernels.duet_attention) or by splitting the model
+axis into sub-meshes (``mesh.split_duet_submeshes``). On CPU the engine runs
+reduced configs end-to-end with the virtual TPU clock (serving/engine.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --trace azure-conv --qps 4 --num-requests 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, list_configs, reduced
+from repro.models.transformer import Model
+from repro.serving.engine import DuetEngine, EngineConfig
+from repro.serving.request import Request
+from repro.serving.traces import TRACES, synth_trace
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs(), default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--trace", choices=list(TRACES), default="azure-conv")
+    ap.add_argument("--qps", type=float, default=4.0)
+    ap.add_argument("--num-requests", type=int, default=16)
+    ap.add_argument("--token-budget", type=int, default=256)
+    ap.add_argument("--tbt-slo", type=float, default=0.1)
+    ap.add_argument("--max-len", type=int, default=1024)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    reqs = synth_trace(args.trace, args.num_requests, args.qps,
+                       seed=args.seed)
+    # clamp lengths so reduced configs fit the slab
+    for r in reqs:
+        r.prompt_len = min(r.prompt_len, args.max_len // 2)
+        r.output_len = min(r.output_len, args.max_len // 4)
+
+    engine = DuetEngine(model, params, EngineConfig(
+        max_slots=args.max_slots, max_len=args.max_len,
+        token_budget=args.token_budget, tbt_slo=args.tbt_slo))
+    engine.submit(reqs)
+    metrics = engine.run()
+    out = metrics.summary()
+    out["duet_fraction"] = engine.mux.stats.duet_fraction
+    out["iterations"] = engine.mux.stats.iterations
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,434 @@
+"""Attention variants: GQA/MQA (full, sliding-window, prefix-LM) and MLA.
+
+Each variant exposes a *prefill* path (full-sequence forward, returns the KV
+cache contribution) and a *decode* path (one token against a cache). The
+decode cache layouts here are the contiguous layouts used by ``train_step`` /
+``decode_step`` lowering; the serving engine's paged layout lives in
+``repro.serving.kvcache`` and the Pallas kernels in ``repro.kernels``.
+
+Shapes: x (B, S, D); q (B, S, H, Dh); kv (B, S, Hkv, Dh); positions (B, S).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, S_max|W, Hkv, Dh)
+    v: jax.Array
+
+
+class MLACache(NamedTuple):
+    ckv: jax.Array    # (B, S_max, r)
+    krope: jax.Array  # (B, S_max, rope_dim)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _qk_norm(q, k, params, eps):
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], eps)
+        k = rms_norm(k, params["k_norm"], eps)
+    return q, k
+
+
+def _gqa_scores(q, k):
+    """q (B,Sq,H,Dh), k (B,Sk,G,Dh) -> scores (B,G,H/G,Sq,Sk)."""
+    B, Sq, H, Dh = q.shape
+    G = k.shape[2]
+    q = q.reshape(B, Sq, G, H // G, Dh)
+    return jnp.einsum("bsgrd,btgd->bgrst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(probs, v):
+    """probs (B,G,R,Sq,Sk), v (B,Sk,G,Dh) -> (B,Sq,H,Dh)."""
+    B, G, R, Sq, _ = probs.shape
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, G * R, v.shape[-1])
+
+
+def _softmax(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+ATTN_BLOCK_Q = 1024  # query-block size for memory-efficient attention
+
+
+def _blockwise_gqa(q, k, v, positions, mask_fn):
+    """Memory-efficient attention: scan over query blocks so only one
+    (B, H, block_q, Sk) score tile is ever live; the block body is
+    checkpointed so the backward pass recomputes tiles instead of storing
+    them (the jnp analogue of flash attention — the Pallas kernel in
+    repro.kernels is the TPU-tiled version of the same schedule).
+
+    q (B,Sq,H,Dh) pre-RoPE'd; positions (B,Sq); mask_fn(qpos_blk) -> bool
+    (B, bq, Sk).
+    """
+    B, Sq, H, Dh = q.shape
+    bq = ATTN_BLOCK_Q
+    pad = (-Sq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)),
+                            constant_values=-1)
+    nb = q.shape[1] // bq
+    qb = q.reshape(B, nb, bq, H, Dh).transpose(1, 0, 2, 3, 4)
+    pb = positions.reshape(B, nb, bq).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def block(qx, px):
+        scores = _gqa_scores(qx, k) / jnp.sqrt(Dh).astype(jnp.float32)
+        mask = mask_fn(px)                       # (B, bq, Sk)
+        probs = _softmax(scores, mask[:, None, None, :, :])
+        return _gqa_combine(probs, v).astype(q.dtype)
+
+    outs = jax.lax.map(lambda xs: block(*xs), (qb, pb))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * bq, H, Dh)
+    return out[:, :Sq]
+
+
+def make_prefill_mask(Sq: int, Sk: int, *, prefix_len: int = 0,
+                      window: Optional[int] = None,
+                      q_offset: int = 0) -> jax.Array:
+    """(Sq, Sk) boolean mask. Causal, optionally prefix-bidirectional
+    (PaliGemma) and/or sliding-window. ``q_offset`` shifts query positions
+    (chunked prefill: queries are the tail of the key range)."""
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = kpos[None, :] <= qpos[:, None]
+    if prefix_len > 0:
+        mask = mask | (kpos[None, :] < prefix_len)
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+def gqa_prefill(params: dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, *, prefix_len: int = 0,
+                window: Optional[int] = None):
+    """Full-sequence attention. Returns (out, AttnCache of the new K/V)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq > ATTN_BLOCK_Q:
+        kpos = jnp.arange(Sk)
+
+        def mask_fn(px):
+            m = kpos[None, None, :] <= px[:, :, None]
+            if prefix_len > 0:
+                m = m | (kpos[None, None, :] < prefix_len)
+            if window is not None:
+                m = m & (kpos[None, None, :] > px[:, :, None] - window)
+            return m & (px[:, :, None] >= 0)
+
+        out = _blockwise_gqa(q, k, v, positions, mask_fn)
+    else:
+        scores = _gqa_scores(q, k) / jnp.sqrt(cfg.head_dim).astype(
+            jnp.float32)
+        mask = make_prefill_mask(Sq, Sk, prefix_len=prefix_len,
+                                 window=window)
+        probs = _softmax(scores, mask)
+        out = _gqa_combine(probs, v).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"])
+    return out, AttnCache(k=k, v=v)
+
+
+def gqa_decode(params: dict, cfg: ArchConfig, x: jax.Array, cache: AttnCache,
+               pos: jax.Array, *, sliding: bool = False):
+    """One-token decode. x (B,1,D); pos (B,) = index of the new token.
+
+    Full cache: write at ``pos``, attend over 0..pos.
+    Sliding (ring buffer of width W): write at ``pos % W``; a slot s holds
+    absolute position pos - ((pos - s) mod W), valid iff that is >= 0.
+    """
+    B = x.shape[0]
+    W = cache.k.shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slot = (pos % W) if sliding else pos
+    bidx = jnp.arange(B)
+    new_k = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+
+    # read path: cast (no-op for bf16; f8 KV caches upcast after the load)
+    k_read = new_k.astype(k.dtype)
+    v_read = new_v.astype(v.dtype)
+    scores = _gqa_scores(q, k_read) / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    slots = jnp.arange(W)
+    if sliding:
+        valid = ((pos[:, None] - slots[None, :]) % W) <= pos[:, None]
+    else:
+        valid = slots[None, :] <= pos[:, None]
+    probs = _softmax(scores, valid[:, None, None, None, :])
+    out = _gqa_combine(probs, v_read).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"])
+    return out, AttnCache(k=new_k, v=new_v)
+
+
+def gqa_prefill_cached(params: dict, cfg: ArchConfig, x: jax.Array,
+                       positions: jax.Array, cache: AttnCache, *,
+                       window: Optional[int] = None,
+                       prefix_len: int = 0):
+    """Chunked prefill: write this chunk's K/V into the cache slab, then
+    attend chunk queries against the whole slab (previous chunks + chunk).
+
+    positions (B, L) are absolute. Slab slots beyond the chunk hold zeros but
+    are masked out causally. Sliding mode uses the ring-buffer mapping: slot s
+    holds absolute position Pmax - ((Pmax - s) mod W) where Pmax is the last
+    written position.
+    """
+    B, L, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    W = cache.k.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    kslot = jnp.arange(W)
+    if window:
+        # Two-phase sliding attention: chunk queries attend the PRE-update
+        # ring (positions <= start-1) plus the in-chunk K/V — writing first
+        # would overwrite in-window keys of early chunk queries. Exact for
+        # any chunk length; the ring is updated afterwards.
+        start = positions[:, :1]                           # (B,1)
+        pmax_old = start - 1
+        abs_old = pmax_old - ((pmax_old - kslot[None, :]) % W)   # (B, W)
+        k_cat = jnp.concatenate([cache.k.astype(k.dtype), k], axis=1)
+        v_cat = jnp.concatenate([cache.v.astype(v.dtype), v], axis=1)
+        chunk_pos = positions                              # (B, L)
+
+        def mask_fn(px):
+            old = (abs_old[:, None, :] <= px[:, :, None]) \
+                & (abs_old[:, None, :] > px[:, :, None] - window) \
+                & (abs_old[:, None, :] >= 0)
+            new = (chunk_pos[:, None, :] <= px[:, :, None]) \
+                & (chunk_pos[:, None, :] > px[:, :, None] - window)
+            return jnp.concatenate([old, new], axis=-1) \
+                & (px[:, :, None] >= 0)
+
+        if L > ATTN_BLOCK_Q:
+            out = _blockwise_gqa(q, k_cat, v_cat, positions, mask_fn)
+        else:
+            scores = _gqa_scores(q, k_cat) / jnp.sqrt(cfg.head_dim).astype(
+                jnp.float32)
+            probs = _softmax(scores, mask_fn(positions)[:, None, None, :, :])
+            out = _gqa_combine(probs, v_cat).astype(x.dtype)
+        slots = positions % W
+        new_k = cache.k.at[bidx, slots].set(k.astype(cache.k.dtype))
+        new_v = cache.v.at[bidx, slots].set(v.astype(cache.v.dtype))
+    else:
+        slots = positions
+        new_k = cache.k.at[bidx, slots].set(k.astype(cache.k.dtype))
+        new_v = cache.v.at[bidx, slots].set(v.astype(cache.v.dtype))
+
+        def mask_fn(px):
+            m = kslot[None, None, :] <= px[:, :, None]
+            if prefix_len > 0:
+                m = m | (kslot[None, None, :] < prefix_len)
+            return m & (px[:, :, None] >= 0)
+
+        if L > ATTN_BLOCK_Q:
+            out = _blockwise_gqa(q, new_k, new_v, positions, mask_fn)
+        else:
+            scores = _gqa_scores(q, new_k) / jnp.sqrt(cfg.head_dim).astype(
+                jnp.float32)
+            probs = _softmax(scores, mask_fn(positions)[:, None, None, :, :])
+            out = _gqa_combine(probs, new_v).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"])
+    return out, AttnCache(k=new_k, v=new_v)
+
+
+def mla_prefill_cached(params: dict, cfg: ArchConfig, x: jax.Array,
+                       positions: jax.Array, cache: MLACache):
+    """Chunked MLA prefill against the compressed latent slab."""
+    B, L, _ = x.shape
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_prefill(params, cfg, x,
+                                                          positions)
+    bidx = jnp.arange(B)[:, None]
+    ckv_store = cache.ckv.at[bidx, positions].set(
+        ckv_new.astype(cache.ckv.dtype))
+    krope_store = cache.krope.at[bidx, positions].set(
+        krope_new.astype(cache.krope.dtype))
+    ckv = ckv_store.astype(x.dtype)       # f8 caches upcast after the load
+    krope = krope_store.astype(x.dtype)
+
+    k_nope = jnp.einsum("btr,rhe->bthe", ckv, params["w_uk"])
+    v = jnp.einsum("btr,rhe->bthe", ckv, params["w_uv"])
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (jnp.einsum("bshe,bthe->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope, krope,
+                           preferred_element_type=jnp.float32)) * scale
+    S = ckv.shape[1]
+    valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]  # (B,L,S)
+    probs = _softmax(scores, valid[:, None, :, :])
+    out = jnp.einsum("bhst,bthe->bshe", probs, v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, L, -1) @ params["w_o"]
+    return out, MLACache(ckv=ckv_store, krope=krope_store)
+
+
+def gqa_decode_kernel(params: dict, cfg: ArchConfig, x: jax.Array,
+                      cache: AttnCache, pos: jax.Array, *,
+                      block_k: int = 128, interpret: bool = True):
+    """Decode attention routed through the fused duet-attention Pallas
+    kernel (kernels/duet_attention.py): each active request is one decode
+    row over the slab — the engine's kernel-backend path. Semantically
+    identical to gqa_decode (full cache, no sliding); tests assert it.
+    """
+    from repro.kernels.duet_attention import duet_attention as _kernel
+    B = x.shape[0]
+    W = cache.k.shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    bidx = jnp.arange(B)
+    new_k = cache.k.at[bidx, pos].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bidx, pos].set(v[:, 0].astype(cache.v.dtype))
+
+    # one tile per decode row (block_q=1): tile_slot = batch index
+    out_rows = _kernel(q[:, 0], pos[:, None].astype(jnp.int32),
+                       bidx.astype(jnp.int32),
+                       new_k.astype(q.dtype), new_v.astype(q.dtype),
+                       block_q=1, block_k=min(block_k, W),
+                       interpret=interpret)
+    out = jnp.einsum("bhe,hed->bd", out_rows, params["w_o"])[:, None, :]
+    return out, AttnCache(k=new_k, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+def _mla_qkv_prefill(params, cfg, x, positions):
+    r, nope, rope = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])       # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    krope = apply_rope((x @ params["w_krope"])[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]           # (B,S,rope)
+    return q_nope, q_rope, ckv, krope
+
+
+def _mla_attend(cfg, q_nope, q_rope, k_nope, v, krope, positions):
+    """MLA attention core with memory-efficient query blocking for long
+    sequences (same schedule as _blockwise_gqa)."""
+    B, Sq = q_nope.shape[:2]
+    Sk = k_nope.shape[1]
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    kpos = jnp.arange(Sk)
+
+    def core(qn, qr, px):
+        scores = (jnp.einsum("bshe,bthe->bhst", qn, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshe,bte->bhst", qr, krope,
+                               preferred_element_type=jnp.float32)) * scale
+        mask = (kpos[None, None, :] <= px[:, :, None]) \
+            & (px[:, :, None] >= 0)
+        probs = _softmax(scores, mask[:, None, :, :])
+        return jnp.einsum("bhst,bthe->bshe", probs,
+                          v.astype(jnp.float32)).astype(q_nope.dtype)
+
+    if Sq <= ATTN_BLOCK_Q:
+        return core(q_nope, q_rope, positions)
+    bq = ATTN_BLOCK_Q
+    pad = (-Sq) % bq
+    if pad:
+        padq = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q_nope, q_rope = padq(q_nope), padq(q_rope)
+        positions = jnp.pad(positions, ((0, 0), (0, pad)),
+                            constant_values=-1)
+    nb = q_nope.shape[1] // bq
+    r = lambda a: a.reshape(B, nb, bq, *a.shape[2:]).transpose(
+        1, 0, 2, *range(3, a.ndim + 1))
+    outs = jax.lax.map(lambda xs: jax.checkpoint(core)(*xs),
+                       (r(q_nope), r(q_rope), r(positions)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * bq, *outs.shape[3:])
+    return out[:, :Sq]
+
+
+def mla_prefill(params: dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array):
+    q_nope, q_rope, ckv, krope = _mla_qkv_prefill(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", ckv, params["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", ckv, params["w_uv"])
+    out = _mla_attend(cfg, q_nope, q_rope, k_nope, v, krope, positions)
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ params["w_o"]
+    return out, MLACache(ckv=ckv, krope=krope)
+
+
+def mla_decode(params: dict, cfg: ArchConfig, x: jax.Array, cache: MLACache,
+               pos: jax.Array, *, absorb: bool = False):
+    """One-token MLA decode against the compressed (ckv, krope) cache.
+
+    ``absorb=False`` — paper-faithful naive path: expand every cached latent to
+    per-head K/V each step (what the reference HF implementation does).
+    ``absorb=True`` — beyond-paper optimization: fold W_uk into the query and
+    W_uv into the output so attention runs in the 512-dim latent space and the
+    per-step expanded K/V (S × H × Dh) is never materialised.
+    """
+    B = x.shape[0]
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_prefill(
+        params, cfg, x, pos[:, None])
+    bidx = jnp.arange(B)
+    ckv_store = cache.ckv.at[bidx, pos].set(
+        ckv_new[:, 0].astype(cache.ckv.dtype))
+    krope_store = cache.krope.at[bidx, pos].set(
+        krope_new[:, 0].astype(cache.krope.dtype))
+    ckv = ckv_store.astype(x.dtype)       # f8 caches upcast after the load
+    krope = krope_store.astype(x.dtype)
+    S = ckv.shape[1]
+    valid = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    rope_scores = jnp.einsum("bshe,bte->bhst", q_rope, krope,
+                             preferred_element_type=jnp.float32)
+    if absorb:
+        q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, params["w_uk"])
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv,
+                             preferred_element_type=jnp.float32)
+                  + rope_scores) * scale
+        probs = _softmax(scores, valid)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhe->bshe", ctx.astype(x.dtype),
+                         params["w_uv"])
+    else:
+        k_nope = jnp.einsum("btr,rhe->bthe", ckv, params["w_uk"])
+        v = jnp.einsum("btr,rhe->bthe", ckv, params["w_uv"])
+        scores = (jnp.einsum("bshe,bthe->bhst", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + rope_scores) * scale
+        probs = _softmax(scores, valid)
+        out = jnp.einsum("bhst,bthe->bshe", probs,
+                         v.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(B, 1, -1) @ params["w_o"]
+    return out, MLACache(ckv=ckv_store, krope=krope_store)

@@ -1,0 +1,120 @@
+"""Shared neural-net building blocks (pure functions, params as dicts).
+
+Conventions:
+  * activations are (B, S, D) unless stated otherwise
+  * params are nested dicts of jnp arrays; every function takes its own
+    sub-dict so blocks compose declaratively from ``ArchConfig.block_pattern``
+  * compute dtype follows the input; params may be bf16 or f32
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x: jax.Array, scale: jax.Array, num_groups: int,
+               eps: float = 1e-6) -> jax.Array:
+    """GroupNorm over the last dim (used by SSM / xLSTM cell outputs)."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x32 = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(*lead, d) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (half-split / llama convention)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh) with Dh even; positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                        # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+def activation_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def gated_mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    """SwiGLU / GeGLU when a gate matrix is present, else plain 2-matrix FFN
+    (granite-20b / musicgen use act(x W_up) W_down)."""
+    u = x @ params["w_up"]
+    if "w_gate" in params:
+        u = activation_fn(act)(x @ params["w_gate"]) * u
+    else:
+        u = activation_fn(act)(u)
+    return u @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with vocab padding
+# ---------------------------------------------------------------------------
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jax.Array, true_vocab: int) -> jax.Array:
+    """Project to (padded) vocab logits; pad columns are masked to -inf."""
+    logits = x @ params["w_out"].T if "w_out" in params else x @ params["embedding"].T
+    padded = logits.shape[-1]
+    if padded > true_vocab:
+        neg = jnp.finfo(logits.dtype).min
+        mask = jnp.arange(padded) < true_vocab
+        logits = jnp.where(mask, logits, neg)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  true_vocab: int) -> jax.Array:
+    """Mean token-level CE. logits (…, V_pad), labels (…,) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Causal conv1d (SSM / mLSTM front conv); channels-last (B, S, C)
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, weight: jax.Array, bias: jax.Array | None,
+                  prev: jax.Array | None = None):
+    """Depthwise causal conv. weight: (W, C). prev: (B, W-1, C) carried state.
+
+    Returns (y, new_prev) where new_prev is the last W-1 inputs (for decode).
+    """
+    w = weight.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], w - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)           # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * weight[i] for i in range(w))
+    if bias is not None:
+        y = y + bias
+    new_prev = xp[:, -(w - 1):, :] if w > 1 else prev
+    return y, new_prev

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Dispatch/combine are expressed as dense einsums over one-hot routing tensors —
+the standard shardable JAX MoE formulation (Switch/Flaxformer style): under
+SPMD, sharding the expert dim over the ``model`` mesh axis yields
+expert-parallel all-to-alls; sharding the per-expert hidden dim yields
+tensor-parallel experts (used when the expert count does not divide the axis,
+e.g. granite-moe's 40 experts on a 16-way axis).
+
+Router: softmax over experts, top-k, renormalised gates, capacity
+C = ceil(T · k / E · capacity_factor); overflow tokens are dropped (their
+combine weight is zero), matching capacity-based reference systems.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import activation_fn, gated_mlp
+
+
+def _capacity(tokens: int, num_experts: int, top_k: int, cf: float) -> int:
+    return max(1, int(-(-tokens * top_k * cf // num_experts)))  # ceil
+
+
+def route(router_logits: jax.Array, top_k: int, capacity: int):
+    """router_logits (T, E) -> dispatch (T, E, C) bool, combine (T, E, C) f32.
+
+    Position within each expert's buffer is the token's rank among the tokens
+    that selected that expert (cumsum order); ranks >= capacity are dropped.
+    """
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # expert-selection mask per top-k slot: (k, T, E)
+    sel = jax.nn.one_hot(gate_idx.T, E, dtype=jnp.int32)          # (k, T, E)
+    # rank of each (slot, token) within its expert, counting slot-major then
+    # token order — flatten slots first so slot 0 choices rank before slot 1.
+    flat = sel.reshape(top_k * T, E)
+    ranks = jnp.cumsum(flat, axis=0) - flat                       # (k*T, E)
+    ranks = ranks.reshape(top_k, T, E)
+    rank_of_choice = jnp.sum(ranks * sel, axis=-1)                # (k, T)
+    keep = rank_of_choice < capacity
+
+    pos_onehot = jax.nn.one_hot(rank_of_choice, capacity,
+                                dtype=jnp.float32)                # (k, T, C)
+    disp_k = sel.astype(jnp.float32)[..., None] * pos_onehot[:, :, None, :]
+    disp_k = disp_k * keep[:, :, None, None]
+    dispatch = jnp.sum(disp_k, axis=0)                            # (T, E, C)
+    combine = jnp.einsum("kt,ktec->tec", gate_vals.T, disp_k)
+    return dispatch > 0, combine
+
+
+MOE_GROUP_SIZE = 1024  # routing-group size (GShard/Switch "group" concept);
+# dispatch one-hots are O(Tg² · k · cf) per group, so Tg trades routing
+# quality against memory — 1024 keeps the per-device footprint ~100MB.
+
+# dispatch implementation: "einsum" = GShard one-hot dense dispatch;
+# "scatter" = index-based scatter/gather dispatch. Both numerically
+# identical (tests assert it). §Perf iteration 1 (EXPERIMENTS.md) REFUTED
+# the scatter hypothesis at scale: data-dependent scatter into an
+# expert-sharded buffer defeats XLA SPMD partitioning (5x bytes, 27x
+# collectives on granite-moe train_4k), while XLA strength-reduces the
+# one-hot einsums anyway — einsum stays the default.
+MOE_IMPL = "einsum"
+
+
+def route_indices(router_logits: jax.Array, top_k: int, capacity: int):
+    """Index-form routing: (T,E) logits -> gate_vals (T,k), slot ids (T,k)
+    into a flat (E*capacity) buffer, and keep mask (T,k)."""
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    sel = jax.nn.one_hot(gate_idx.T, E, dtype=jnp.int32)          # (k, T, E)
+    flat = sel.reshape(top_k * T, E)
+    ranks = (jnp.cumsum(flat, axis=0) - flat).reshape(top_k, T, E)
+    rank_of_choice = jnp.sum(ranks * sel, axis=-1).T              # (T, k)
+    keep = rank_of_choice < capacity
+    sid = gate_idx * capacity + jnp.minimum(rank_of_choice, capacity - 1)
+    return gate_vals, sid, keep
+
+
+def moe_ffn(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x (B, S, D) -> (B, S, D). params: router (D, E), experts w_gate/up/down
+    stacked on a leading expert dim, optional shared expert MLP.
+
+    Tokens are routed in independent groups of ``MOE_GROUP_SIZE`` so the
+    dispatch tensor is (G, Tg, E, C) with C ∝ Tg — O(T) total memory instead
+    of the O(T²) of flat routing, and the group dim shards over data axes
+    while the expert dim shards over the model axis (expert parallelism)."""
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    E, k = cfg.num_experts, cfg.moe_top_k
+
+    Tg = min(MOE_GROUP_SIZE, T)
+    pad = (-T) % Tg
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    G = xf.shape[0] // Tg
+    xg = xf.reshape(G, Tg, D)
+    E_active = cfg.num_experts_routed or E
+    C = _capacity(Tg, E_active, k, cfg.capacity_factor)
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"])
+    if cfg.num_experts_routed and cfg.num_experts_routed < E:
+        pad_mask = jnp.arange(E) >= cfg.num_experts_routed
+        logits = jnp.where(pad_mask, -1e30, logits)
+    act = activation_fn(cfg.activation)
+    if MOE_IMPL == "scatter":
+        gate_vals, sid, keep = jax.vmap(
+            lambda l: route_indices(l, k, C))(logits)       # (G,Tg,k)
+        gidx = jnp.arange(G)[:, None, None]
+        expert_in = jnp.zeros((G, E * C, D), xg.dtype)
+        src = xg[:, :, None, :] * keep[..., None].astype(xg.dtype)
+        expert_in = expert_in.at[gidx, sid].add(src)
+        expert_in = expert_in.reshape(G, E, C, D)
+        h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+        expert_out = jnp.einsum("gecf,efd->gecd", h,
+                                params["w_down"]).reshape(G, E * C, D)
+        gathered = expert_out[gidx, sid]                     # (G,Tg,k,D)
+        w = (gate_vals * keep).astype(xg.dtype)
+        y = jnp.einsum("gtk,gtkd->gtd", w, gathered)
+    else:
+        dispatch, combine = jax.vmap(lambda l: route(l, k, C))(logits)
+        expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xg.dtype),
+                               xg)
+        h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+        expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+        y = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype),
+                       expert_out)
+    y = y.reshape(-1, D)[:T]
+
+    if "shared" in params:
+        y = y + gated_mlp(params["shared"], xf[:T], cfg.activation)
+    return y.reshape(B, S, D)
+
+
+def load_balance_loss(router_logits: jax.Array, top_k: int) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss (mean fraction · mean prob)."""
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    _, idx = jax.lax.top_k(probs, top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+    return E * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -1,0 +1,326 @@
+"""Parameter layout, initialisation and sharding — single source of truth.
+
+``layout(cfg)`` builds a pytree of :class:`ParamDef` leaves (shape + init kind
++ logical axis names). ``init_params`` materialises it; ``param_specs`` maps
+logical axes to mesh axes through per-arch divisibility rules (DESIGN.md §4).
+Keeping one tree definition guarantees init, sharding specs and the model code
+never drift apart.
+
+Sharding rules (mesh axes ``data``/``model``, optional ``pod``):
+  * weights are sharded on ``model`` only; ``data``/``pod`` shard the batch
+  * heads -> model iff num_heads and (expanded) kv heads divide the axis;
+    otherwise attention weights stay replicated (musicgen 24H, minicpm 36H,
+    paligemma 8H, granite-moe 24H, xlstm 4H)
+  * kv heads smaller than the axis are expanded by repetition in the
+    tp-adjusted config (semantics preserved; standard GQA TP practice)
+  * MoE: expert dim -> model when divisible (deepseek 64e), else per-expert
+    ffn dim -> model (granite-moe 40e)
+  * vocab padded to 256 so the embedding/LM head always shards
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    init: str                    # normal | zeros | ones | neg | uniform_log
+    axes: Tuple[Optional[str], ...]
+    fan_in: Optional[int] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _slstm_ffn_dim(d_model: int) -> int:
+    return int(round(d_model * 4 / 3 / 64)) * 64
+
+
+def _mlstm_inner(cfg: ArchConfig) -> int:
+    return int(cfg.mlstm_proj_factor * cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+def _attn_layout(cfg: ArchConfig) -> dict:
+    D, H, G, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "w_q": ParamDef((D, H, dh), "normal", ("embed", "heads", "head_dim"), D),
+        "w_k": ParamDef((D, G, dh), "normal", ("embed", "kv_heads", "head_dim"), D),
+        "w_v": ParamDef((D, G, dh), "normal", ("embed", "kv_heads", "head_dim"), D),
+        "w_o": ParamDef((H, dh, D), "normal", ("heads", "head_dim", "embed"),
+                        H * dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamDef((dh,), "ones", (None,))
+        p["k_norm"] = ParamDef((dh,), "ones", (None,))
+    return p
+
+
+def _mla_layout(cfg: ArchConfig) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    r, nope, rope, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                         cfg.v_head_dim)
+    return {
+        "w_q": ParamDef((D, H, nope + rope), "normal",
+                        ("embed", "heads", "head_dim"), D),
+        "w_dkv": ParamDef((D, r), "normal", ("embed", "kv_lora"), D),
+        "kv_norm": ParamDef((r,), "ones", (None,)),
+        "w_krope": ParamDef((D, rope), "normal", ("embed", None), D),
+        "w_uk": ParamDef((r, H, nope), "normal", ("kv_lora", "heads", "head_dim"), r),
+        "w_uv": ParamDef((r, H, vd), "normal", ("kv_lora", "heads", "head_dim"), r),
+        "w_o": ParamDef((H * vd, D), "normal", ("heads_flat", "embed"), H * vd),
+    }
+
+
+def _mlp_layout(cfg: ArchConfig, d_ff: int, gated: bool | None = None) -> dict:
+    D = cfg.d_model
+    gated = cfg.mlp_gated if gated is None else gated
+    p = {
+        "w_up": ParamDef((D, d_ff), "normal", ("embed", "ffn"), D),
+        "w_down": ParamDef((d_ff, D), "normal", ("ffn", "embed"), d_ff),
+    }
+    if gated:
+        p["w_gate"] = ParamDef((D, d_ff), "normal", ("embed", "ffn"), D)
+    return p
+
+
+def _moe_layout(cfg: ArchConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "router": ParamDef((D, E), "normal", ("embed", None), D),
+        "w_gate": ParamDef((E, D, F), "normal", ("experts", "embed", "moe_ffn"), D),
+        "w_up": ParamDef((E, D, F), "normal", ("experts", "embed", "moe_ffn"), D),
+        "w_down": ParamDef((E, F, D), "normal", ("experts", "moe_ffn", "embed"), F),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = _mlp_layout(cfg, cfg.num_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def _mamba_layout(cfg: ArchConfig) -> dict:
+    D, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv
+    conv_ch = di + 2 * n
+    return {
+        "w_z": ParamDef((D, di), "normal", ("embed", "ssm_inner"), D),
+        "w_x": ParamDef((D, di), "normal", ("embed", "ssm_inner"), D),
+        "w_B": ParamDef((D, n), "normal", ("embed", None), D),
+        "w_C": ParamDef((D, n), "normal", ("embed", None), D),
+        "w_dt": ParamDef((D, h), "normal", ("embed", "ssm_heads"), D),
+        "conv_w": ParamDef((W, conv_ch), "normal", (None, None), W),
+        "conv_b": ParamDef((conv_ch,), "zeros", (None,)),
+        "dt_bias": ParamDef((h,), "uniform_log", ("ssm_heads",)),
+        "A_log": ParamDef((h,), "uniform_log", ("ssm_heads",)),
+        "D": ParamDef((h,), "ones", ("ssm_heads",)),
+        "norm": ParamDef((di,), "ones", ("ssm_inner",)),
+        "w_out": ParamDef((di, D), "normal", ("ssm_inner", "embed"), di),
+    }
+
+
+def _mlstm_layout(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    di = _mlstm_inner(cfg)
+    h = cfg.num_heads
+    W = cfg.ssm_conv
+    return {
+        "w_up": ParamDef((D, 2 * di), "normal", ("embed", "mlstm_inner"), D),
+        "conv_w": ParamDef((W, di), "normal", (None, None), W),
+        "conv_b": ParamDef((di,), "zeros", ("mlstm_inner",)),
+        "w_q": ParamDef((di, di), "normal", ("mlstm_inner", "mlstm_inner"), di),
+        "w_k": ParamDef((di, di), "normal", ("mlstm_inner", "mlstm_inner"), di),
+        "w_v": ParamDef((di, di), "normal", ("mlstm_inner", "mlstm_inner"), di),
+        "w_gates": ParamDef((di, 2 * h), "normal", ("mlstm_inner", None), di),
+        "b_gates": ParamDef((2 * h,), "zeros", (None,)),
+        "norm": ParamDef((di,), "ones", ("mlstm_inner",)),
+        "skip": ParamDef((di,), "zeros", ("mlstm_inner",)),
+        "w_down": ParamDef((di, D), "normal", ("mlstm_inner", "embed"), di),
+    }
+
+
+def _slstm_layout(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    f = _slstm_ffn_dim(D)
+    return {
+        "w_in": ParamDef((D, 4 * D), "normal", ("embed", None), D),
+        "b_in": ParamDef((4 * D,), "zeros", (None,)),
+        "R": ParamDef((4, h, dh, dh), "normal", (None, None, None, None), dh),
+        "norm": ParamDef((D,), "ones", (None,)),
+        "ffn_norm": ParamDef((D,), "ones", (None,)),
+        "ffn": {
+            "w_gate": ParamDef((D, f), "normal", ("embed", "ffn"), D),
+            "w_up": ParamDef((D, f), "normal", ("embed", "ffn"), D),
+            "w_down": ParamDef((f, D), "normal", ("ffn", "embed"), f),
+        },
+    }
+
+
+def _block_layout(cfg: ArchConfig, kind: str, layer_idx: int) -> dict:
+    D = cfg.d_model
+    norm = lambda: ParamDef((D,), "ones", (None,))
+    if kind == "attn":
+        return {"attn_norm": norm(), "attn": _attn_layout(cfg),
+                "mlp_norm": norm(), "mlp": _mlp_layout(cfg, cfg.d_ff)}
+    if kind == "attn_moe":
+        return {"attn_norm": norm(), "attn": _attn_layout(cfg),
+                "mlp_norm": norm(), "moe": _moe_layout(cfg)}
+    if kind == "mla":
+        return {"attn_norm": norm(), "attn": _mla_layout(cfg),
+                "mlp_norm": norm(), "mlp": _mlp_layout(cfg, cfg.d_ff)}
+    if kind == "mla_moe":
+        return {"attn_norm": norm(), "attn": _mla_layout(cfg),
+                "mlp_norm": norm(), "moe": _moe_layout(cfg)}
+    if kind == "mamba2":
+        return {"norm": norm(), "mamba": _mamba_layout(cfg)}
+    if kind == "shared_attn":
+        return {}  # weights live at the top-level "shared_attn" slot
+    if kind == "mlstm":
+        return {"norm": norm(), "mlstm": _mlstm_layout(cfg)}
+    if kind == "slstm":
+        return {"norm": norm(), "slstm": _slstm_layout(cfg)}
+    raise ValueError(kind)
+
+
+def layout(cfg: ArchConfig) -> dict:
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    tree: dict = {
+        "embedding": ParamDef((Vp, D), "normal", ("vocab", "embed"), D),
+        "final_norm": ParamDef((D,), "ones", (None,)),
+        "layers": [
+            _block_layout(cfg, kind, i)
+            for i, kind in enumerate(cfg.block_pattern)
+        ],
+    }
+    if cfg.frontend == "audio":
+        tree["codebook_embeddings"] = ParamDef(
+            (cfg.num_codebooks, Vp, D), "normal", (None, "vocab", "embed"), D)
+        tree["w_heads"] = ParamDef((cfg.num_codebooks, Vp, D), "normal",
+                                   (None, "vocab", "embed"), D)
+        del tree["embedding"]
+    elif not cfg.tie_embeddings:
+        tree["w_out"] = ParamDef((Vp, D), "normal", ("vocab", "embed"), D)
+    if "shared_attn" in cfg.block_pattern:
+        tree["shared_attn"] = _block_layout(cfg, "attn", 0)
+    return tree
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+# ---------------------------------------------------------------------------
+# init / eval-shape / counting
+# ---------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key: jax.Array,
+                dtype=jnp.float32) -> dict:
+    defs, treedef = jax.tree.flatten(layout(cfg), is_leaf=_is_def)
+    keys = jax.random.split(key, len(defs))
+
+    def make(d: ParamDef, k):
+        if d.init == "normal":
+            scale = 1.0 / math.sqrt(d.fan_in or d.shape[0])
+            return (jax.random.normal(k, d.shape, jnp.float32)
+                    * scale).astype(dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "uniform_log":
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1e-3, 0.1)
+            return jnp.log(u).astype(jnp.float32)  # gates kept in f32
+        raise ValueError(d.init)
+
+    return jax.tree.unflatten(treedef, [make(d, k) for d, k in zip(defs, keys)])
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct tree (no allocation) for lowering."""
+    def make(d: ParamDef):
+        dt = jnp.float32 if d.init == "uniform_log" else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+    return jax.tree.map(make, layout(cfg), is_leaf=_is_def)
+
+
+def count_params_analytical(cfg: ArchConfig, active_only: bool = False) -> int:
+    total = 0
+    for leafpath, d in jax.tree.leaves_with_path(layout(cfg), is_leaf=_is_def):
+        n = math.prod(d.shape)
+        if active_only and d.axes and d.axes[0] == "experts":
+            n = n * (cfg.moe_top_k / cfg.num_experts)
+        total += int(n)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+def tp_adjusted_config(cfg: ArchConfig, tp: int,
+                       pad_experts: bool = False) -> ArchConfig:
+    """Expand KV heads by repetition when smaller than the TP degree (only
+    when q heads shard) — numerically identical attention, standard TP GQA.
+    With ``pad_experts`` an MoE whose expert count does not divide the axis
+    gets zero-weight padding experts (masked in the router) so the expert
+    dim shards — expert parallelism instead of per-expert TP
+    (§Perf iteration, EXPERIMENTS.md)."""
+    if tp <= 1:
+        return cfg
+    if pad_experts and cfg.is_moe and cfg.num_experts % tp != 0:
+        padded = -(-cfg.num_experts // tp) * tp
+        cfg = dataclasses.replace(cfg, num_experts=padded,
+                                  num_experts_routed=cfg.num_experts)
+    if cfg.num_heads % tp != 0 or cfg.kv_lora_rank > 0:
+        return cfg
+    if cfg.num_kv_heads % tp != 0 and tp % cfg.num_kv_heads == 0:
+        return dataclasses.replace(cfg, num_kv_heads=tp)
+    return cfg
+
+
+def axis_rules(cfg: ArchConfig, model_axis_size: int) -> dict:
+    m = model_axis_size
+    heads_ok = (cfg.num_heads % m == 0
+                and (cfg.kv_lora_rank > 0 or cfg.num_kv_heads % m == 0))
+    experts_ok = cfg.num_experts % m == 0 if cfg.is_moe else False
+    return {
+        "vocab": "model",
+        "embed": None,
+        "head_dim": None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if heads_ok else None,
+        "heads_flat": "model" if heads_ok else None,
+        "ffn": "model" if (cfg.d_ff and cfg.d_ff % m == 0) else None,
+        "kv_lora": None,
+        "experts": "model" if experts_ok else None,
+        "moe_ffn": ("model" if (not experts_ok and cfg.is_moe
+                                and cfg.moe_d_ff % m == 0) else None),
+        "ssm_inner": "model" if (cfg.ssm_state and cfg.d_inner % m == 0) else None,
+        "ssm_heads": "model" if (cfg.ssm_state and cfg.ssm_heads % m == 0) else None,
+        "mlstm_inner": None,   # xlstm-350m: 4 heads — replicated (DESIGN.md §4)
+        None: None,
+    }
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    rules = axis_rules(cfg, mesh.shape.get("model", 1))
+
+    def spec(d: ParamDef):
+        return P(*[rules.get(a) for a in d.axes])
+
+    return jax.tree.map(spec, layout(cfg), is_leaf=_is_def)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh) -> dict:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))

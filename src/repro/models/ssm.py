@@ -1,0 +1,144 @@
+"""Mamba2 (State Space Duality) block — chunked parallel prefill + O(1) decode.
+
+Prefill uses the SSD chunkwise algorithm: the sequence is split into chunks of
+``CHUNK`` steps; within a chunk the recurrence is evaluated in its quadratic
+(attention-like) dual form, and a sequential ``lax.scan`` carries the
+(heads, head_dim, state) SSM state across chunks. This keeps the materialised
+working set at one (B, H, L, L) score block per chunk — the TPU-friendly
+shape — instead of the O(S · head_dim · state) blow-up of a naive
+associative scan.
+
+Decode is the plain recurrence: h ← a·h + dt·x⊗B, y = C·h + D·x, with the
+causal-conv tail carried as a (B, W-1, C) state.
+
+State layout (MambaCache):
+  conv: (B, conv_width-1, d_inner + 2*state)
+  ssm:  (B, heads, head_dim, state)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import causal_conv1d, group_norm
+
+CHUNK = 256
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array
+    ssm: jax.Array
+
+
+def _split_proj(params: dict, cfg: ArchConfig, x: jax.Array):
+    """Input projections -> (z, xBC, dt). x (B,S,D). Separate weights per
+    component so the inner dim shards cleanly (DESIGN.md §4)."""
+    z = x @ params["w_z"]
+    xbc = jnp.concatenate(
+        [x @ params["w_x"], x @ params["w_B"], x @ params["w_C"]], axis=-1)
+    dt = x @ params["w_dt"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return z, xbc, dt  # dt (B,S,h) f32
+
+
+def _gate_out(params: dict, cfg: ArchConfig, y: jax.Array, z: jax.Array):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = group_norm(y, params["norm"], num_groups=cfg.ssm_heads,
+                   eps=cfg.norm_eps)
+    return y @ params["w_out"]
+
+
+def mamba2_prefill(params: dict, cfg: ArchConfig, x: jax.Array,
+                   cache: MambaCache | None = None):
+    """x (B,S,D) -> (y (B,S,D), MambaCache). S must divide by CHUNK or be
+    shorter than one chunk (it is padded internally)."""
+    B, S, D = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc, dt = _split_proj(params, cfg, x)
+    prev_conv = cache.conv if cache is not None else None
+    xbc_c, conv_state = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                      prev_conv)
+    xbc_c = jax.nn.silu(xbc_c)
+    xs = xbc_c[..., :cfg.d_inner].reshape(B, S, h, p)
+    Bm = xbc_c[..., cfg.d_inner:cfg.d_inner + n]
+    Cm = xbc_c[..., cfg.d_inner + n:]
+
+    L = min(CHUNK, S)
+    pad = (-S) % L
+    if pad:
+        zeros = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xs, Bm, Cm, dt = zeros(xs), zeros(Bm), zeros(Cm), zeros(dt)
+    Sp = S + pad
+    nc = Sp // L
+    xs = xs.reshape(B, nc, L, h, p)
+    Bm = Bm.reshape(B, nc, L, n)
+    Cm = Cm.reshape(B, nc, L, n)
+    dt = dt.reshape(B, nc, L, h)
+
+    neg_A = -jnp.exp(params["A_log"].astype(jnp.float32))   # (h,)
+    la = dt * neg_A                                          # (B,nc,L,h) log a
+    cum = jnp.cumsum(la, axis=2)                             # inclusive
+
+    ssm0 = (cache.ssm if cache is not None
+            else jnp.zeros((B, h, p, n), jnp.float32)).astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(hstate, inputs):
+        xc, Bc, Cc, dtc, cumc = inputs  # (B,L,h,p) (B,L,n) (B,L,n) (B,L,h) (B,L,h)
+        # intra-chunk quadratic dual
+        cb = jnp.einsum("btn,bsn->bts", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))              # (B,L,L)
+        decay = jnp.exp(cumc[:, :, None, :] - cumc[:, None, :, :])  # (B,t,s,h)
+        G = cb[..., None] * decay * dtc[:, None, :, :]        # (B,t,s,h)
+        G = jnp.where(causal[None, :, :, None], G, 0.0)
+        xc_f = xc.astype(jnp.float32)
+        y_intra = jnp.einsum("btsh,bshp->bthp", G, xc_f)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bhpn->bthp", Cc.astype(jnp.float32),
+                             hstate) * jnp.exp(cumc)[:, :, :, None]
+        # state update
+        tail = jnp.exp(cumc[:, -1:, :] - cumc)                # (B,L,h)
+        dx = (dtc * tail)[..., None] * xc_f                   # (B,L,h,p)
+        h_new = jnp.exp(cumc[:, -1, :])[:, :, None, None] * hstate \
+            + jnp.einsum("blhp,bln->bhpn", dx, Bc.astype(jnp.float32))
+        return h_new, y_intra + y_inter
+
+    inputs = (xs.transpose(1, 0, 2, 3, 4), Bm.transpose(1, 0, 2, 3),
+              Cm.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2, 3),
+              cum.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(chunk_step, ssm0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, h, p)[:, :S]
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(B, Sp, h, p)[:, :S].astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    out = _gate_out(params, cfg, y, z)
+    return out, MambaCache(conv=conv_state, ssm=h_final)
+
+
+def mamba2_decode(params: dict, cfg: ArchConfig, x: jax.Array,
+                  cache: MambaCache):
+    """x (B,1,D) -> (y (B,1,D), MambaCache)."""
+    B = x.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc, dt = _split_proj(params, cfg, x)         # dt (B,1,h)
+    xbc_c, conv_state = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                      cache.conv)
+    xbc_c = jax.nn.silu(xbc_c)[:, 0]                 # (B, C)
+    xs = xbc_c[:, :cfg.d_inner].reshape(B, h, p).astype(jnp.float32)
+    Bm = xbc_c[:, cfg.d_inner:cfg.d_inner + n].astype(jnp.float32)
+    Cm = xbc_c[:, cfg.d_inner + n:].astype(jnp.float32)
+    dt0 = dt[:, 0]                                   # (B,h)
+
+    neg_A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt0 * neg_A)                         # (B,h)
+    h_new = a[:, :, None, None] * cache.ssm \
+        + (dt0[:, :, None] * xs)[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm) \
+        + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    out = _gate_out(params, cfg, y, z)
+    return out, MambaCache(conv=conv_state, ssm=h_new)

@@ -1,0 +1,380 @@
+"""Composable model assembly driven by ``ArchConfig.block_pattern``.
+
+One :class:`Model` serves every assigned architecture family:
+
+  * ``loss``          — training objective (causal LM; multi-codebook CE for
+                        audio; text-suffix CE for VLM prefix-LM)
+  * ``prefill``       — full-sequence or chunked-prefill forward; returns the
+                        per-layer cache (KV / latent / recurrent state)
+  * ``decode_step``   — one token against the cache (per-request positions,
+                        continuous-batching friendly)
+  * ``init_cache``    — concrete cache; ``cache_specs`` — ShapeDtypeStructs
+                        for lowering; ``cache_pspecs`` — PartitionSpecs
+
+Cache layout per layer (list aligned with ``block_pattern``):
+  attn/shared_attn -> AttnCache(k, v)      (ring buffer when sliding)
+  mla              -> MLACache(ckv, krope)
+  mamba2           -> MambaCache(conv, ssm)
+  mlstm            -> MLSTMCache(conv, C, n, m)
+  slstm            -> SLSTMCache(c, n, m, h)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import AttnCache, MLACache
+from repro.models.layers import cross_entropy, gated_mlp, rms_norm, unembed
+from repro.models.moe import moe_ffn
+from repro.models.params import (_mlstm_inner, _slstm_ffn_dim, abstract_params,
+                                 axis_rules, init_params)
+from repro.models.ssm import MambaCache
+from repro.models.xlstm import MLSTMCache, SLSTMCache
+
+ATTN_KINDS = ("attn", "attn_moe", "shared_attn")
+MLA_KINDS = ("mla", "mla_moe")
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, *, mla_absorb: bool = False,
+                 remat: bool = False, attn_kernel: bool = False):
+        self.cfg = cfg
+        self.mla_absorb = mla_absorb
+        self.remat = remat  # checkpoint each block in the training forward
+        # route decode attention through the fused duet Pallas kernel
+        # (interpret mode off-TPU); jnp path is the default oracle
+        self.attn_kernel = attn_kernel
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        return init_params(self.cfg, key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16) -> dict:
+        return abstract_params(self.cfg, dtype)
+
+    # ----------------------------------------------------------------- embed
+    def _embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            # tokens (B, K, S): sum of codebook embeddings
+            x = sum(jnp.take(params["codebook_embeddings"][k], tokens[:, k],
+                             axis=0) for k in range(cfg.num_codebooks))
+            return x, 0
+        x = jnp.take(params["embedding"], tokens, axis=0)
+        prefix_len = 0
+        if patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+            prefix_len = patch_embeds.shape[1]
+        return x, prefix_len
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            return jnp.einsum("bsd,kvd->bskv", x, params["w_heads"])
+        if cfg.tie_embeddings or "w_out" not in params:
+            logits = x @ params["embedding"].T
+        else:
+            logits = x @ params["w_out"].T
+        padded, true_v = logits.shape[-1], cfg.vocab_size
+        if padded > true_v:
+            mask = jnp.arange(padded) < true_v
+            logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+        return logits
+
+    # ---------------------------------------------------------------- blocks
+    def _block_params(self, params, i):
+        kind = self.cfg.block_pattern[i]
+        if kind == "shared_attn":
+            return params["shared_attn"], "attn"
+        return params["layers"][i], kind
+
+    def _run_block_prefill(self, params, i, x, positions, cache_in,
+                           *, prefix_len=0, window=None):
+        cfg = self.cfg
+        p, kind = self._block_params(params, i)
+        real_kind = cfg.block_pattern[i]
+        if real_kind in ATTN_KINDS or real_kind in MLA_KINDS:
+            h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+            if real_kind in MLA_KINDS:
+                if cache_in is not None:
+                    out, new_cache = attn_mod.mla_prefill_cached(
+                        p["attn"], cfg, h, positions, cache_in)
+                else:
+                    out, new_cache = attn_mod.mla_prefill(p["attn"], cfg, h,
+                                                          positions)
+            else:
+                if cache_in is not None:
+                    out, new_cache = attn_mod.gqa_prefill_cached(
+                        p["attn"], cfg, h, positions, cache_in,
+                        prefix_len=prefix_len, window=window)
+                else:
+                    out, new_cache = attn_mod.gqa_prefill(
+                        p["attn"], cfg, h, positions, prefix_len=prefix_len,
+                        window=window)
+            x = x + out
+            h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+            if real_kind in ("attn_moe", "mla_moe"):
+                x = x + moe_ffn(p["moe"], cfg, h)
+            else:
+                x = x + gated_mlp(p["mlp"], h, cfg.activation)
+            return x, new_cache
+        if real_kind == "mamba2":
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            out, new_cache = ssm_mod.mamba2_prefill(p["mamba"], cfg, h,
+                                                    cache_in)
+            return x + out, new_cache
+        if real_kind == "mlstm":
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            out, new_cache = xlstm_mod.mlstm_prefill(p["mlstm"], cfg, h,
+                                                     cache_in)
+            return x + out, new_cache
+        if real_kind == "slstm":
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            out, new_cache = xlstm_mod.slstm_forward(p["slstm"], cfg, h,
+                                                     cache_in)
+            return x + out, new_cache
+        raise ValueError(real_kind)
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, tokens, *, patch_embeds=None, sliding=False):
+        """Full-sequence forward -> logits over every position."""
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        window = cfg.sliding_window if sliding else None
+
+        def block(i, params, x):
+            y, _ = self._run_block_prefill(
+                params, i, x, positions, None,
+                prefix_len=prefix_len if cfg.prefix_lm else 0, window=window)
+            return y
+
+        for i in range(cfg.num_layers):
+            fn = (jax.checkpoint(lambda p, h, i=i: block(i, p, h))
+                  if self.remat else (lambda p, h, i=i: block(i, p, h)))
+            x = fn(params, x)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x)
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            logits = self.forward(params, batch["tokens"][:, :, :-1])
+            labels = batch["labels"][:, :, 1:]           # (B,K,S-1)
+            # logits (B,S,K,V) -> (B,K,S,V) to align with labels
+            return cross_entropy(jnp.swapaxes(logits, 1, 2), labels,
+                                 cfg.vocab_size)
+        if cfg.frontend == "vision":
+            logits = self.forward(params, batch["tokens"],
+                                  patch_embeds=batch["patch_embeds"])
+            Ptok = batch["patch_embeds"].shape[1]
+            St = batch["tokens"].shape[1]
+            pred = logits[:, Ptok - 1:Ptok + St - 1]
+            return cross_entropy(pred, batch["labels"], cfg.vocab_size)
+        logits = self.forward(params, batch["tokens"][:, :-1])
+        return cross_entropy(logits, batch["labels"][:, 1:], cfg.vocab_size)
+
+    # ---------------------------------------------------------------- serve
+    def prefill(self, params, tokens, *, cache=None, start_pos=None,
+                patch_embeds=None, sliding=False):
+        """Prefill (optionally a chunk continuing an existing cache).
+
+        Returns (last_position_logits, cache). With ``cache`` given, the new
+        chunk K/V is written into the slab; recurrent state carries forward.
+        ``start_pos``: traced scalar/array offset of the chunk (default 0).
+        """
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, tokens, patch_embeds)
+        B, S = x.shape[:2]
+        if start_pos is None:
+            start = jnp.zeros((B,), jnp.int32)
+        else:
+            start = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
+        positions = start[:, None] + jnp.arange(S)[None, :]
+        window = cfg.sliding_window if sliding else None
+        new_cache = []
+        for i in range(cfg.num_layers):
+            layer_cache = cache[i] if cache is not None else None
+            x, c = self._run_block_prefill(
+                params, i, x, positions, layer_cache,
+                prefix_len=prefix_len if cfg.prefix_lm else 0, window=window)
+            new_cache.append(c)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params, cache, token, pos, *, sliding=False):
+        """One decode step. token (B,1) (audio: (B,K,1)); pos (B,) int32.
+        Returns (logits (B, V) or (B,K,V), new_cache)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = sum(jnp.take(params["codebook_embeddings"][k],
+                             token[:, k], axis=0)
+                    for k in range(cfg.num_codebooks))
+        else:
+            x = jnp.take(params["embedding"], token, axis=0)
+        new_cache = []
+        for i in range(cfg.num_layers):
+            p, _ = self._block_params(params, i)
+            kind = cfg.block_pattern[i]
+            if kind in ATTN_KINDS:
+                h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+                if self.attn_kernel and not sliding:
+                    out, c = attn_mod.gqa_decode_kernel(p["attn"], cfg, h,
+                                                        cache[i], pos)
+                else:
+                    out, c = attn_mod.gqa_decode(p["attn"], cfg, h, cache[i],
+                                                 pos, sliding=sliding)
+                x = x + out
+                h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+                if kind == "attn_moe":
+                    x = x + moe_ffn(p["moe"], cfg, h)
+                else:
+                    x = x + gated_mlp(p["mlp"], h, cfg.activation)
+            elif kind in MLA_KINDS:
+                h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+                out, c = attn_mod.mla_decode(p["attn"], cfg, h, cache[i], pos,
+                                             absorb=self.mla_absorb)
+                x = x + out
+                h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+                if kind == "mla_moe":
+                    x = x + moe_ffn(p["moe"], cfg, h)
+                else:
+                    x = x + gated_mlp(p["mlp"], h, cfg.activation)
+            elif kind == "mamba2":
+                h = rms_norm(x, p["norm"], cfg.norm_eps)
+                out, c = ssm_mod.mamba2_decode(p["mamba"], cfg, h, cache[i])
+                x = x + out
+            elif kind == "mlstm":
+                h = rms_norm(x, p["norm"], cfg.norm_eps)
+                out, c = xlstm_mod.mlstm_decode(p["mlstm"], cfg, h, cache[i])
+                x = x + out
+            elif kind == "slstm":
+                h = rms_norm(x, p["norm"], cfg.norm_eps)
+                out, c = xlstm_mod.slstm_forward(p["slstm"], cfg, h, cache[i])
+                x = x + out
+            else:
+                raise ValueError(kind)
+            new_cache.append(c)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_cache
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32,
+                   *, sliding: bool = False):
+        return _build_cache(self.cfg, batch, max_len, dtype, sliding,
+                            concrete=True)
+
+
+# ---------------------------------------------------------------------------
+def _build_cache(cfg: ArchConfig, batch: int, max_len: int, dtype, sliding,
+                 *, concrete: bool):
+    make = (lambda shape, dt: jnp.zeros(shape, dt)) if concrete else \
+        (lambda shape, dt: jax.ShapeDtypeStruct(shape, dt))
+    f32 = jnp.float32
+    S = min(max_len, cfg.sliding_window) if sliding else max_len
+    cache = []
+    for kind in cfg.block_pattern:
+        if kind in ATTN_KINDS:
+            G, dh = cfg.num_kv_heads, cfg.head_dim
+            cache.append(AttnCache(k=make((batch, S, G, dh), dtype),
+                                   v=make((batch, S, G, dh), dtype)))
+        elif kind in MLA_KINDS:
+            cache.append(MLACache(
+                ckv=make((batch, max_len, cfg.kv_lora_rank), dtype),
+                krope=make((batch, max_len, cfg.qk_rope_dim), dtype)))
+        elif kind == "mamba2":
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+            cache.append(MambaCache(
+                conv=make((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+                ssm=make((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), f32)))
+        elif kind == "mlstm":
+            di = _mlstm_inner(cfg)
+            h, dh = cfg.num_heads, di // cfg.num_heads
+            cache.append(MLSTMCache(
+                conv=make((batch, cfg.ssm_conv - 1, di), dtype),
+                C=make((batch, h, dh, dh), f32),
+                n=make((batch, h, dh), f32),
+                m=make((batch, h), f32)))
+        elif kind == "slstm":
+            D = cfg.d_model
+            cache.append(SLSTMCache(c=make((batch, D), f32),
+                                    n=make((batch, D), f32),
+                                    m=make((batch, D), f32),
+                                    h=make((batch, D), f32)))
+        else:
+            raise ValueError(kind)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, *, sliding: bool = False):
+    """ShapeDtypeStruct cache tree for lowering (no allocation)."""
+    return _build_cache(cfg, batch, max_len, dtype, sliding, concrete=False)
+
+
+def cache_pspecs(cfg: ArchConfig, mesh: Mesh, batch: int,
+                 *, sliding: bool = False):
+    """PartitionSpecs aligned with the cache tree.
+
+    Batch shards over (pod?, data) when divisible. For batch==1 (long_500k)
+    attention caches shard their *sequence* dim over the data axes instead
+    (context-parallel decode); recurrent states replicate over data.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    batch_divisor = 1
+    for a in axes:
+        batch_divisor *= mesh.shape[a]
+    batch_ax = axes if (batch % batch_divisor == 0 and batch > 1) else None
+    seq_ax = axes if batch_ax is None else None
+    rules = axis_rules(cfg, mesh.shape.get("model", 1))
+    heads_ax = rules["heads"]
+    ssm_heads_ax = rules["ssm_heads"]
+
+    specs = []
+    for kind in cfg.block_pattern:
+        if kind in ATTN_KINDS:
+            kv_ax = rules["kv_heads"]
+            # §Perf iteration 2 (EXPERIMENTS.md): when KV heads cannot shard
+            # over `model` (head count not divisible), shard the cache
+            # SEQUENCE dim over it instead — flash-decode-style partial
+            # attention; otherwise the cache is replicated model-axis-wide
+            # and blows the per-device HBM budget (minicpm decode_32k was
+            # 98 GB/device).
+            seq_parts = list(seq_ax) if seq_ax else []
+            if kv_ax is None:
+                seq_parts.append("model")
+            s = P(batch_ax, tuple(seq_parts) if seq_parts else None,
+                  kv_ax, None)
+            specs.append(AttnCache(k=s, v=s))
+        elif kind in MLA_KINDS:
+            seq_parts = list(seq_ax) if seq_ax else []
+            seq_parts.append("model")   # latent cache: shard seq over model
+            sq = tuple(seq_parts)
+            specs.append(MLACache(ckv=P(batch_ax, sq, None),
+                                  krope=P(batch_ax, sq, None)))
+        elif kind == "mamba2":
+            specs.append(MambaCache(
+                conv=P(batch_ax, None, None),
+                ssm=P(batch_ax, ssm_heads_ax, None, None)))
+        elif kind == "mlstm":
+            specs.append(MLSTMCache(conv=P(batch_ax, None, None),
+                                    C=P(batch_ax, None, None, None),
+                                    n=P(batch_ax, None, None),
+                                    m=P(batch_ax, None)))
+        elif kind == "slstm":
+            s2 = P(batch_ax, None)
+            specs.append(SLSTMCache(c=s2, n=s2, m=s2, h=s2))
+        else:
+            raise ValueError(kind)
+    return specs

@@ -1,0 +1,227 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel prefill) and sLSTM
+(scalar memory, strictly sequential scan) [arXiv:2405.04517].
+
+mLSTM prefill uses the stabilised chunkwise-parallel form (the published
+kernel math): within a chunk the recurrence is evaluated as masked
+linear attention with log-space gate decays; a ``lax.scan`` carries the
+stabilised matrix state (C, n, m) across chunks. Decode is the O(1)
+recurrent step. sLSTM has a true recurrent h->gates dependency, so prefill is
+a ``lax.scan`` over time (this is inherent to the architecture, not an
+implementation shortcut).
+
+Cache layouts:
+  MLSTMCache: conv (B, W-1, di), C (B, H, Dh, Dh), n (B, H, Dh), m (B, H)
+  SLSTMCache: c, n, h (B, di) and m (B, di)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import causal_conv1d, gated_mlp, group_norm, rms_norm
+
+MLSTM_CHUNK = 256
+
+
+class MLSTMCache(NamedTuple):
+    conv: jax.Array
+    C: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_qkv_gates(params, cfg, x, conv_prev):
+    """Common pre-cell computation. x (B,S,D)."""
+    di, h, dh = _mlstm_dims(cfg)
+    up = x @ params["w_up"]                      # (B,S,2di)
+    x_m, z = up[..., :di], up[..., di:]
+    conv_out, conv_state = causal_conv1d(x_m, params["conv_w"],
+                                         params["conv_b"], conv_prev)
+    conv_act = jax.nn.silu(conv_out)
+    B, S = x.shape[:2]
+    q = (conv_act @ params["w_q"]).reshape(B, S, h, dh)
+    k = (conv_act @ params["w_k"]).reshape(B, S, h, dh)
+    v = (x_m @ params["w_v"]).reshape(B, S, h, dh)
+    gates = x_m @ params["w_gates"] + params["b_gates"]        # (B,S,2h)
+    logi = gates[..., :h].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+    return x_m, z, conv_act, conv_state, q, k, v, logi, logf
+
+
+def _mlstm_out(params, cfg, h_cell, conv_act, z):
+    di, h, dh = _mlstm_dims(cfg)
+    B, S = h_cell.shape[:2]
+    y = group_norm(h_cell.reshape(B, S, di), params["norm"], num_groups=h,
+                   eps=cfg.norm_eps)
+    y = y + params["skip"] * conv_act
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"]
+
+
+def mlstm_prefill(params: dict, cfg: ArchConfig, x: jax.Array,
+                  cache: MLSTMCache | None = None):
+    B, S, D = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    conv_prev = cache.conv if cache is not None else None
+    x_m, z, conv_act, conv_state, q, k, v, logi, logf = _mlstm_qkv_gates(
+        params, cfg, x, conv_prev)
+
+    L = min(MLSTM_CHUNK, S)
+    pad = (-S) % L
+    if pad:
+        pad2 = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v = pad2(q), pad2(k), pad2(v)
+        logi = jnp.pad(logi, [(0, 0), (0, pad), (0, 0)],
+                       constant_values=-1e30)   # padded steps contribute 0
+        logf = pad2(logf)
+    Sp = S + pad
+    nc = Sp // L
+    rs = lambda a: a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2,
+                                                               *range(3, a.ndim + 1))
+    qc, kc, vc = rs(q), rs(k), rs(v)             # (nc,B,L,h,dh)
+    lic, lfc = rs(logi), rs(logf)                # (nc,B,L,h)
+
+    if cache is not None:
+        C0, n0, m0 = (cache.C.astype(jnp.float32),
+                      cache.n.astype(jnp.float32),
+                      cache.m.astype(jnp.float32))
+    else:
+        C0 = jnp.zeros((B, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, h, dh), jnp.float32)
+        m0 = jnp.full((B, h), -1e30, jnp.float32)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    scale = 1.0 / jnp.sqrt(dh)
+
+    def chunk_step(carry, inputs):
+        C, n, m = carry
+        qx, kx, vx, li, lf = inputs              # (B,L,h,dh) / (B,L,h)
+        F = jnp.cumsum(lf, axis=1)               # inclusive (B,L,h)
+        # log weight of source s for query t: F_t - F_s + li_s   (s <= t)
+        Dlog = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        Dlog = jnp.where(causal[None, :, :, None], Dlog, -1e30)
+        b = F + m[:, None, :]                    # carry branch (B,L,h)
+        m_t = jnp.maximum(jnp.max(Dlog, axis=2), b)          # (B,L,h)
+        W = jnp.exp(Dlog - m_t[:, :, None, :])               # (B,t,s,h)
+        carry_w = jnp.exp(b - m_t)                           # (B,L,h)
+
+        qf = qx.astype(jnp.float32) * scale
+        kf = kx.astype(jnp.float32)
+        vf = vx.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * W
+        num = jnp.einsum("btsh,bshd->bthd", scores, vf) \
+            + carry_w[..., None] * jnp.einsum("bthd,bhde->bthe", qf, C)
+        nvec = jnp.einsum("btsh,bshd->bthd", W, kf) \
+            + carry_w[..., None] * n[:, None, :, :]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", qf, nvec)),
+                          jnp.exp(-m_t))
+        h_out = num / den[..., None]
+
+        # chunk-end state update
+        g = F[:, -1, :]                                       # (B,h)
+        src = g[:, None, :] - F + li                          # (B,L,h)
+        m_next = jnp.maximum(g + m, jnp.max(src, axis=1))
+        C_next = jnp.exp(g + m - m_next)[:, :, None, None] * C \
+            + jnp.einsum("blh,blhd,blhe->bhde", jnp.exp(src - m_next[:, None, :]),
+                         kf, vf)
+        n_next = jnp.exp(g + m - m_next)[:, :, None] * n \
+            + jnp.einsum("blh,blhd->bhd", jnp.exp(src - m_next[:, None, :]), kf)
+        return (C_next, n_next, m_next), h_out
+
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                    (qc, kc, vc, lic, lfc))
+    h_cell = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, h, dh)[:, :S]
+    out = _mlstm_out(params, cfg, h_cell.astype(x.dtype), conv_act, z)
+    return out, MLSTMCache(conv=conv_state, C=Cf, n=nf, m=mf)
+
+
+def mlstm_decode(params: dict, cfg: ArchConfig, x: jax.Array,
+                 cache: MLSTMCache):
+    B = x.shape[0]
+    di, h, dh = _mlstm_dims(cfg)
+    x_m, z, conv_act, conv_state, q, k, v, logi, logf = _mlstm_qkv_gates(
+        params, cfg, x, cache.conv)
+    qf = q[:, 0].astype(jnp.float32) / jnp.sqrt(dh)   # (B,h,dh)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    li, lf = logi[:, 0], logf[:, 0]                   # (B,h)
+
+    m_new = jnp.maximum(lf + cache.m, li)
+    fw = jnp.exp(lf + cache.m - m_new)
+    iw = jnp.exp(li - m_new)
+    C_new = fw[:, :, None, None] * cache.C \
+        + iw[:, :, None, None] * kf[:, :, :, None] * vf[:, :, None, :]
+    n_new = fw[:, :, None] * cache.n + iw[:, :, None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    h_cell = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    out = _mlstm_out(params, cfg, h_cell, conv_act, z)
+    return out, MLSTMCache(conv=conv_state, C=C_new, n=n_new, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def _slstm_step(params, cfg, carry, x_t):
+    """One recurrent step. x_t (B, 4*di) pre-computed input projection."""
+    c, n, m, h_prev = carry
+    di = cfg.d_model
+    heads, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    # recurrent contribution: block-diagonal per head, for all 4 gates
+    hr = h_prev.reshape(-1, heads, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hr,
+                     params["R"]).reshape(-1, 4 * di)   # g = gate index
+    raw = (x_t + rec).astype(jnp.float32)
+    zi, ii, fi, oi = jnp.split(raw, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, ii)
+    i_w = jnp.exp(ii - m_new)
+    f_w = jnp.exp(logf + m - m_new)
+    c_new = f_w * c + i_w * zt
+    n_new = f_w * n + i_w
+    h_new = jax.nn.sigmoid(oi) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(params: dict, cfg: ArchConfig, x: jax.Array,
+                  cache: SLSTMCache | None = None):
+    """x (B,S,D) -> (y, SLSTMCache). Sequential scan over S (inherent)."""
+    B, S, D = x.shape
+    if cache is None:
+        zero = jnp.zeros((B, D), jnp.float32)
+        cache = SLSTMCache(c=zero, n=zero, m=jnp.full((B, D), -1e30,
+                                                      jnp.float32), h=zero)
+    xw = x @ params["w_in"] + params["b_in"]          # (B,S,4di)
+
+    def step(carry, x_t):
+        return _slstm_step(params, cfg, carry, x_t)
+
+    carry0 = (cache.c, cache.n, cache.m, cache.h)
+    (c, n, m, hl), hs = jax.lax.scan(step, carry0, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)         # (B,S,D)
+    y = group_norm(y, params["norm"], num_groups=cfg.num_heads,
+                   eps=cfg.norm_eps)
+    y = y + gated_mlp(params["ffn"], rms_norm(y, params["ffn_norm"],
+                                              cfg.norm_eps), "gelu")
+    return y, SLSTMCache(c=c, n=n, m=m, h=hl)

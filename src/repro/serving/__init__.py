@@ -1,0 +1,23 @@
+from repro.serving.request import Phase, Request, ServingMetrics
+from repro.serving.traces import TRACES, synth_trace, synthetic_fixed
+from repro.serving.kvcache import (PagedKVCacheManager, PagePoolConfig,
+                                   gather_kv, init_page_pools, write_kv_page)
+from repro.serving.scheduler import (ChunkedPrefillPolicy, DuetPolicy,
+                                     IterationPlan, PrefillFirstPolicy,
+                                     QueueState)
+from repro.serving.simulator import (ClusterSim, DisaggSim, InstanceSim,
+                                     SimConfig, kv_bytes_per_token,
+                                     kv_capacity_tokens,
+                                     make_baseline_instance,
+                                     make_duet_instance)
+from repro.serving.engine import DuetEngine, EngineConfig
+
+__all__ = [
+    "Phase", "Request", "ServingMetrics", "TRACES", "synth_trace",
+    "synthetic_fixed", "PagedKVCacheManager", "PagePoolConfig", "gather_kv",
+    "init_page_pools", "write_kv_page", "ChunkedPrefillPolicy", "DuetPolicy",
+    "IterationPlan", "PrefillFirstPolicy", "QueueState", "ClusterSim",
+    "DisaggSim", "InstanceSim", "SimConfig", "kv_bytes_per_token",
+    "kv_capacity_tokens", "make_baseline_instance", "make_duet_instance",
+    "DuetEngine", "EngineConfig",
+]

@@ -1,0 +1,242 @@
+"""Real-JAX DuetServe engine: continuous batching with chunked prefill,
+adaptive duet multiplexing, paged-KV accounting, and interruption-free
+look-ahead decode (fused k-step jitted programs, §4.3).
+
+Execution vs time accounting: the engine *computes real tokens* with the JAX
+model (slot-batched slab cache, greedy/temperature sampling). Because this
+container is CPU-only while the serving target is TPU v5e, the engine clock
+advances by the attention-aware roofline prediction — the same oracle the
+paper's scheduler uses and validates (Fig. 8; reproduced against real JAX
+wall-time in benchmarks/fig8). Metrics (TTFT/TBT/throughput) are therefore
+TPU-scale while every generated token is real.
+
+Duet mode on a single chip uses the fused duet-attention kernel's grid
+partitioning (kernel-level analogue of SM masking — DESIGN.md §2); across
+chips the launcher splits the mesh instead (launch/serve.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.lookahead import make_lookahead_fn
+from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.core.roofline import HardwareSpec, TPU_V5E
+from repro.models.transformer import Model
+from repro.serving.kvcache import PagedKVCacheManager, PagePoolConfig
+from repro.serving.request import Phase, Request, ServingMetrics
+from repro.serving.scheduler import DuetPolicy, IterationPlan, QueueState
+
+K_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def _k_bucket(k: int) -> int:
+    for b in reversed(K_BUCKETS):
+        if k >= b:
+            return b
+    return 1
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8           # concurrent requests resident on the chip
+    max_len: int = 2048          # slab KV length per slot
+    token_budget: int = 512
+    tbt_slo: float = 0.1
+    units: int = 1               # chips in this replica
+    tp: int = 1
+    page_size: int = 16
+    temperature: float = 0.0
+    sched_overhead: float = 0.0005
+    dispatch_overhead: float = 0.004
+
+
+class DuetEngine:
+    def __init__(self, model: Model, params, engine_cfg: EngineConfig,
+                 hw: HardwareSpec = TPU_V5E, seed: int = 0):
+        self.model = model
+        self.cfg: ArchConfig = model.cfg
+        self.params = params
+        self.ec = engine_cfg
+        self.hw = hw
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = model.init_cache(engine_cfg.max_slots, engine_cfg.max_len)
+        pool_pages = engine_cfg.max_slots * (
+            -(-engine_cfg.max_len // engine_cfg.page_size)) + 1
+        self.kv_mgr = PagedKVCacheManager(
+            PagePoolConfig(num_pages=pool_pages,
+                           page_size=engine_cfg.page_size))
+        self.mux = AdaptiveMultiplexer(
+            self.cfg, hw=hw, total_units=engine_cfg.units,
+            tbt_slo=engine_cfg.tbt_slo, tp=engine_cfg.tp)
+        self.policy = DuetPolicy(self.mux,
+                                 token_budget=engine_cfg.token_budget,
+                                 max_batch=engine_cfg.max_slots)
+        self.state = QueueState()
+        self.now = 0.0
+        self.free_slots = list(range(engine_cfg.max_slots))
+        self.slot_pos = np.zeros(engine_cfg.max_slots, np.int32)
+        self.slot_last_token = np.zeros(engine_cfg.max_slots, np.int32)
+        self.finished: List[Request] = []
+        self._decode_fns: Dict[int, callable] = {}
+        self._prefill_fn = jax.jit(
+            lambda p, toks, cache, start: model.prefill(
+                p, toks, cache=cache, start_pos=start))
+
+    # ------------------------------------------------------------- plumbing
+    def _decode_fn(self, k: int):
+        if k not in self._decode_fns:
+            self._decode_fns[k] = make_lookahead_fn(
+                self.model, k, temperature=self.ec.temperature)
+        return self._decode_fns[k]
+
+    def _slice_cache(self, slot: int):
+        return jax.tree.map(lambda a: a[slot:slot + 1], self.cache,
+                            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+    def _write_cache(self, slot: int, sub):
+        self.cache = jax.tree.map(
+            lambda full, part: full.at[slot].set(part[0]), self.cache, sub)
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, requests: List[Request]):
+        for r in sorted(requests, key=lambda x: x.arrival):
+            if r.prompt_tokens is None:
+                r.prompt_tokens = np.random.default_rng(r.rid).integers(
+                    0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
+        self._pending = sorted(requests, key=lambda r: r.arrival)
+
+    # ------------------------------------------------------------ execution
+    def _exec_prefill_chunk(self, r: Request, chunk: int):
+        toks = jnp.asarray(
+            r.prompt_tokens[r.prefilled:r.prefilled + chunk])[None, :]
+        sub = self._slice_cache(r.slot)
+        logits, sub = self._prefill_fn(self.params, toks, sub,
+                                       jnp.int32(r.prefilled))
+        self._write_cache(r.slot, sub)
+        self.kv_mgr.allocate(r.rid, chunk)
+        r.prefilled += chunk
+        if r.remaining_prompt <= 0:
+            tok = int(jnp.argmax(logits[0]))
+            self.slot_last_token[r.slot] = tok
+            self.slot_pos[r.slot] = r.prompt_len
+            r.output_tokens.append(tok)
+            return True
+        return False
+
+    def _exec_decode(self, decode_reqs: List[Request], k: int):
+        if not decode_reqs:
+            return
+        kb = _k_bucket(k)
+        kb = max(1, min(kb, min(r.output_len - r.generated
+                                for r in decode_reqs)))
+        # §4.3: preallocate KV pages for all k look-ahead steps up front
+        self.kv_mgr.reserve_lookahead([r.rid for r in decode_reqs], kb)
+        active = np.zeros(self.ec.max_slots, bool)
+        for r in decode_reqs:
+            active[r.slot] = True
+        first = jnp.asarray(self.slot_last_token)[:, None]
+        pos = jnp.asarray(self.slot_pos)
+        self.key, sub = jax.random.split(self.key)
+        fn = self._decode_fn(kb)
+        toks, self.cache, new_pos = fn(self.params, self.cache, first, pos,
+                                       sub, jnp.asarray(active))
+        toks = np.array(toks)
+        self.slot_pos = np.array(new_pos)
+        for r in decode_reqs:
+            seq = toks[r.slot, :kb]
+            take = min(kb, r.output_len - r.generated)
+            r.output_tokens.extend(int(t) for t in seq[:take])
+            self.slot_last_token[r.slot] = int(seq[min(take, kb) - 1])
+            self.kv_mgr.commit_tokens(r.rid, take)
+        return kb
+
+    # ------------------------------------------------------------- run loop
+    def run(self) -> ServingMetrics:
+        pending = self._pending
+        all_reqs = list(pending)
+        pending = list(pending)
+        while pending or self.state.waiting or self.state.running \
+                or self.state.prefilling:
+            self.state.admit_arrivals(pending, self.now)
+            # slot admission: waiting requests need a slab slot
+            for r in list(self.state.waiting):
+                if self.free_slots and r.prompt_len + r.output_len \
+                        <= self.ec.max_len:
+                    r.slot = self.free_slots.pop()
+            self.state.waiting = [r for r in self.state.waiting
+                                  if r.slot is not None or True]
+            plan = self._plan()
+            if plan.is_idle:
+                if pending:
+                    self.now = max(self.now, pending[0].arrival)
+                    continue
+                break
+            self._execute(plan)
+        return ServingMetrics(requests=all_reqs, duration=self.now)
+
+    def _plan(self) -> IterationPlan:
+        # only slot-admitted requests are schedulable
+        sched_state = QueueState(
+            waiting=[r for r in self.state.waiting if r.slot is not None],
+            running=self.state.running,
+            prefilling=self.state.prefilling)
+        plan = self.policy.schedule(sched_state)
+        # sync admission back
+        for r, _ in plan.prefill:
+            if r in self.state.waiting:
+                self.state.waiting.remove(r)
+                if r not in self.state.prefilling:
+                    self.state.prefilling.append(r)
+        self.state.prefilling = sched_state.prefilling
+        return plan
+
+    def _execute(self, plan: IterationPlan):
+        pre_loads, dec_loads = plan.loads()
+        if plan.mode == "duet" and plan.decision.partition is not None:
+            part = plan.decision.partition
+            k = part.k
+            t_d, t_p = part.t_decode, part.t_prefill
+            span = max(k * t_d, t_p) + self.ec.sched_overhead \
+                + self.ec.dispatch_overhead
+        else:
+            k = 1
+            t_iter = self.mux.predict_mixed(pre_loads + dec_loads) \
+                + self.ec.sched_overhead \
+                + (self.ec.dispatch_overhead if plan.prefill else 0.0)
+            t_d = t_p = span = t_iter
+
+        kb = self._exec_decode(plan.decode, k) if plan.decode else 0
+        for r, chunk in plan.prefill:
+            done = self._exec_prefill_chunk(r, chunk)
+            if done:
+                self.state.prefilling.remove(r)
+                r.phase = Phase.DECODE
+                r.record_token(self.now + t_p)
+                if r.done:
+                    self._retire(r)
+                else:
+                    self.state.running.append(r)
+        # metrics: decode tokens at t_d spacing (decode dispatched first)
+        for j in range(1, (kb or 0) + 1):
+            ts = self.now + j * t_d
+            for r in list(plan.decode):
+                if r.generated < len(r.output_tokens):
+                    r.record_token(ts)
+                    if r.done:
+                        self.state.running.remove(r)
+                        self._retire(r)
+        self.now += span
+
+    def _retire(self, r: Request):
+        self.kv_mgr.free(r.rid)
+        if r.slot is not None:
+            self.free_slots.append(r.slot)
+            r.slot = None
+        self.finished.append(r)

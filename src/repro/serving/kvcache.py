@@ -1,0 +1,153 @@
+"""Paged KV-cache management (PagedAttention-style, Kwon et al. 2023).
+
+Host side: a page allocator with per-request page tables, free-list
+accounting, and the look-ahead reservation API the interruption-free engine
+needs (§4.3: KV slots for k future decode steps are preallocated so the
+k-step fused decode program never synchronises with the host).
+
+Device side: per-layer page pools ``(num_pages, page_size, Hkv, Dh)``. The
+jnp reference read/write path lives here; the Pallas paged-decode kernel
+(``repro.kernels.paged_decode``) consumes the same layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass
+class PagePoolConfig:
+    num_pages: int
+    page_size: int = 16
+
+
+class PagedKVCacheManager:
+    """Host-side allocator. Pages are identified by int indices into the
+    device pools; page 0 is reserved as the null page (padding in block
+    tables), matching common paged-attention implementations."""
+
+    def __init__(self, pool: PagePoolConfig):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self._free: List[int] = list(range(pool.num_pages - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self._lengths: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.pool.num_pages - 1) - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(1, self.pool.num_pages - 1)
+
+    def pages_needed(self, rid: int, new_tokens: int) -> int:
+        cur = self._lengths.get(rid, 0)
+        cur_pages = len(self._tables.get(rid, []))
+        need_pages = -(-(cur + new_tokens) // self.page_size)
+        return max(0, need_pages - cur_pages)
+
+    def can_allocate(self, rid: int, new_tokens: int) -> bool:
+        return self.pages_needed(rid, new_tokens) <= self.free_pages
+
+    def can_admit(self, requests_new_tokens: Dict[int, int]) -> bool:
+        need = sum(self.pages_needed(r, n)
+                   for r, n in requests_new_tokens.items())
+        return need <= self.free_pages
+
+    # ---------------------------------------------------------- allocation
+    def allocate(self, rid: int, new_tokens: int) -> List[int]:
+        """Extend `rid`'s table to cover `new_tokens` more tokens. Returns
+        the newly assigned pages. Raises MemoryError when the pool is out."""
+        need = self.pages_needed(rid, new_tokens)
+        if need > self.free_pages:
+            raise MemoryError(
+                f"KV pool exhausted: need {need}, free {self.free_pages}")
+        tbl = self._tables.setdefault(rid, [])
+        new = [self._free.pop() for _ in range(need)]
+        tbl.extend(new)
+        self._lengths[rid] = self._lengths.get(rid, 0) + new_tokens
+        return new
+
+    def reserve_lookahead(self, rids: List[int], k: int) -> bool:
+        """Preallocate pages covering k future decode tokens for every
+        request (paper §4.3). All-or-nothing."""
+        need = sum(self.pages_needed(r, k) for r in rids)
+        if need > self.free_pages:
+            return False
+        for r in rids:
+            self.allocate(r, k)
+            self._lengths[r] -= k     # reserved, not yet written
+        return True
+
+    def commit_tokens(self, rid: int, n: int):
+        """Mark n reserved tokens as written."""
+        self._lengths[rid] = self._lengths.get(rid, 0) + n
+
+    def free(self, rid: int):
+        for p in self._tables.pop(rid, []):
+            self._free.append(p)
+        self._lengths.pop(rid, None)
+
+    def page_table(self, rid: int) -> List[int]:
+        return list(self._tables.get(rid, []))
+
+    def length(self, rid: int) -> int:
+        return self._lengths.get(rid, 0)
+
+    def padded_tables(self, rids: List[int], max_pages: int) -> np.ndarray:
+        """(B, max_pages) int32 block-table matrix, null-page padded."""
+        out = np.zeros((len(rids), max_pages), np.int32)
+        for i, r in enumerate(rids):
+            tbl = self._tables.get(r, [])[:max_pages]
+            out[i, :len(tbl)] = tbl
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Device pools + jnp reference read/write (the Pallas kernel mirrors these)
+# ---------------------------------------------------------------------------
+def init_page_pools(cfg: ArchConfig, pool: PagePoolConfig,
+                    dtype=jnp.float32):
+    """Per-attention-layer (k_pages, v_pages) arrays. Non-attention layers
+    (SSM/xLSTM) hold None — their state is O(1) and lives in the slab."""
+    pools = []
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "attn_moe", "shared_attn"):
+            shape = (pool.num_pages, pool.page_size, cfg.num_kv_heads,
+                     cfg.head_dim)
+            pools.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+        elif kind in ("mla", "mla_moe"):
+            shape_c = (pool.num_pages, pool.page_size, cfg.kv_lora_rank)
+            shape_r = (pool.num_pages, pool.page_size, cfg.qk_rope_dim)
+            pools.append((jnp.zeros(shape_c, dtype), jnp.zeros(shape_r, dtype)))
+        else:
+            pools.append(None)
+    return pools
+
+
+def write_kv_page(pages: jax.Array, kv: jax.Array, page_ids: jax.Array,
+                  offsets: jax.Array) -> jax.Array:
+    """Scatter new tokens into pages. kv (B, T, ...) with page_ids/offsets
+    (B, T) addressing (page, slot) per token."""
+    flat = kv.reshape((-1,) + kv.shape[2:])
+    return pages.at[page_ids.reshape(-1), offsets.reshape(-1)].set(
+        flat.astype(pages.dtype))
+
+
+def gather_kv(pages: jax.Array, table: jax.Array, length: int) -> jax.Array:
+    """Reference gather: (pages(P,ps,...) , table (n_pages,)) -> (L, ...)."""
+    ps = pages.shape[1]
+    n = -(-length // ps)
+    gathered = pages[table[:n]]                     # (n, ps, ...)
+    return gathered.reshape((-1,) + pages.shape[2:])[:length]

@@ -1,0 +1,101 @@
+"""Request lifecycle and serving metrics (TTFT / TBT / throughput)."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float               # seconds since serving start
+    prompt_len: int
+    output_len: int              # target generation length
+
+    # progress ------------------------------------------------------------
+    phase: Phase = Phase.WAITING
+    prefilled: int = 0           # prompt tokens already prefilled
+    generated: int = 0           # output tokens produced
+    slot: Optional[int] = None   # engine batch slot (real engine only)
+    prompt_tokens: Optional[np.ndarray] = None   # real engine: token ids
+    output_tokens: List[int] = field(default_factory=list)
+
+    # metrics ---------------------------------------------------------------
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def remaining_prompt(self) -> int:
+        return self.prompt_len - self.prefilled
+
+    @property
+    def context_len(self) -> int:
+        """Tokens currently in this request's KV cache."""
+        return self.prefilled + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.output_len
+
+    # ------------------------------------------------------------------
+    def record_token(self, now: float):
+        self.generated += 1
+        if self.first_token_time is None:
+            self.first_token_time = now
+        self.token_times.append(now)
+        if self.done:
+            self.phase = Phase.FINISHED
+            self.finish_time = now
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def tbt_samples(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+
+@dataclass
+class ServingMetrics:
+    requests: List[Request] = field(default_factory=list)
+    duration: float = 0.0
+
+    def summary(self) -> dict:
+        finished = [r for r in self.requests if r.finish_time is not None]
+        ttfts = [r.ttft() for r in finished if r.ttft() is not None]
+        tbts = [t for r in finished for t in r.tbt_samples()]
+        out_tokens = sum(r.generated for r in self.requests)
+        total_tokens = out_tokens + sum(r.prefilled for r in self.requests)
+        dur = max(self.duration, 1e-9)
+        return {
+            "num_finished": len(finished),
+            "num_requests": len(self.requests),
+            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+            "p99_ttft_s": _pct(ttfts, 0.99),
+            "mean_tbt_s": sum(tbts) / len(tbts) if tbts else float("nan"),
+            "p99_tbt_s": _pct(tbts, 0.99),
+            "request_throughput": len(finished) / dur,
+            "output_token_throughput": out_tokens / dur,
+            "total_token_throughput": total_tokens / dur,
+            "duration_s": self.duration,
+        }
+
+
+def _pct(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    idx = min(len(xs) - 1, int(p * len(xs)))
+    return xs[idx]

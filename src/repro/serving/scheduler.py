@@ -1,0 +1,206 @@
+"""Iteration-level schedulers: DuetServe (paper §4, Algorithm 1 front-end)
+plus the baseline policies it is evaluated against (§5.1).
+
+All policies share the same interface: given the queue state they emit an
+:class:`IterationPlan` describing what the engine (real or simulated) runs
+this iteration. DuetServe's plan additionally carries the roofline decision
+and the (S_p, S_d, k) partition when duet mode triggers.
+
+Policies:
+  * DuetPolicy            — chunked prefill + decode-first, adaptive duet
+  * ChunkedPrefillPolicy  — vLLM / Sarathi-Serve / SGLang-chunked: fixed
+                            token budget, decode-first, always aggregated
+  * PrefillFirstPolicy    — SGLang-default: throughput-oriented; runs
+                            prefill-only batches while memory allows, then
+                            drains with decode-only iterations
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.core.partition import ScheduleDecision
+from repro.core.roofline import RequestLoad
+from repro.serving.request import Phase, Request
+
+# Token budget defaults: the paper uses 8192 on H100 (the linear-layer knee).
+# The equivalent knee for TPU v5e (197 TFLOP/s / 819 GB/s ≈ 240 FLOP/byte ->
+# n ≈ 240 tokens per weight-stream amortisation knee is much lower; in
+# practice the same 2k–8k budgets apply for utilisation) — we keep 8192 to
+# mirror the paper and expose it as a knob everywhere.
+DEFAULT_TOKEN_BUDGET = 8192
+
+
+@dataclass
+class IterationPlan:
+    mode: str                                  # aggregated | duet | idle
+    decode: List[Request] = field(default_factory=list)
+    prefill: List[Tuple[Request, int]] = field(default_factory=list)
+    decision: Optional[ScheduleDecision] = None
+    k: int = 1                                 # look-ahead decode depth
+
+    @property
+    def is_idle(self) -> bool:
+        return not self.decode and not self.prefill
+
+    def loads(self) -> Tuple[List[RequestLoad], List[RequestLoad]]:
+        pre = [RequestLoad(q=chunk, c=r.prefilled, phase="prefill")
+               for r, chunk in self.prefill]
+        dec = [RequestLoad(q=1, c=r.context_len, phase="decode")
+               for r in self.decode]
+        return pre, dec
+
+
+@dataclass
+class QueueState:
+    waiting: List[Request] = field(default_factory=list)
+    running: List[Request] = field(default_factory=list)   # decode phase
+    prefilling: List[Request] = field(default_factory=list)
+
+    def admit_arrivals(self, requests: List[Request], now: float):
+        while requests and requests[0].arrival <= now:
+            r = requests.pop(0)
+            r.phase = Phase.WAITING
+            self.waiting.append(r)
+
+
+class BasePolicy:
+    """Shared chunked-prefill mechanics (budget fill, admission control)."""
+
+    def __init__(self, *, token_budget: int = DEFAULT_TOKEN_BUDGET,
+                 max_batch: int = 1024,
+                 kv_capacity_tokens: Optional[int] = None):
+        self.token_budget = token_budget
+        self.max_batch = max_batch
+        self.kv_capacity = kv_capacity_tokens
+        self.kv_in_use = 0
+
+    # -- admission bookkeeping (token-granular; engine swaps in the paged
+    #    manager for page-granular accounting) ------------------------------
+    def _reserve(self, r: Request) -> bool:
+        if self.kv_capacity is None:
+            return True
+        need = r.prompt_len + r.output_len
+        if self.kv_in_use + need > self.kv_capacity:
+            return False
+        self.kv_in_use += need
+        return True
+
+    def release(self, r: Request):
+        if self.kv_capacity is not None:
+            self.kv_in_use -= r.prompt_len + r.output_len
+
+    def _fill_prefill(self, state: QueueState, budget: int,
+                      slots_left: int) -> List[Tuple[Request, int]]:
+        chunks: List[Tuple[Request, int]] = []
+        # continue in-flight chunked prefills first (paper: automatic chunking)
+        for r in state.prefilling:
+            if budget <= 0 or slots_left <= 0:
+                break
+            chunk = min(budget, r.remaining_prompt)
+            if chunk > 0:
+                chunks.append((r, chunk))
+                budget -= chunk
+                slots_left -= 1
+        # then admit waiting requests FCFS
+        while state.waiting and budget > 0 and slots_left > 0:
+            r = state.waiting[0]
+            if not self._reserve(r):
+                break
+            state.waiting.pop(0)
+            r.phase = Phase.PREFILL
+            state.prefilling.append(r)
+            chunk = min(budget, r.remaining_prompt)
+            chunks.append((r, chunk))
+            budget -= chunk
+            slots_left -= 1
+        return chunks
+
+
+class ChunkedPrefillPolicy(BasePolicy):
+    """vLLM-style: decode-first, then chunk prefills into the leftover token
+    budget. Always aggregated (the interference DuetServe removes)."""
+
+    def schedule(self, state: QueueState) -> IterationPlan:
+        decode = state.running[:self.max_batch]
+        budget = self.token_budget - len(decode)
+        chunks = self._fill_prefill(state, budget,
+                                    self.max_batch - len(decode))
+        mode = "aggregated" if (decode or chunks) else "idle"
+        return IterationPlan(mode=mode, decode=decode, prefill=chunks)
+
+
+class PrefillFirstPolicy(BasePolicy):
+    """SGLang-default-like: opportunistically run prefill-only batches while
+    requests wait (maximising prefill throughput), decode-only otherwise.
+    Reproduces the unbounded-TBT failure mode of Fig. 6."""
+
+    def schedule(self, state: QueueState) -> IterationPlan:
+        if state.waiting or state.prefilling:
+            chunks = self._fill_prefill(state, self.token_budget,
+                                        self.max_batch)
+            if chunks:
+                return IterationPlan(mode="aggregated", prefill=chunks)
+        decode = state.running[:self.max_batch]
+        mode = "aggregated" if decode else "idle"
+        return IterationPlan(mode=mode, decode=decode)
+
+
+class DuetPolicy(BasePolicy):
+    """DuetServe: chunked-prefill scheduling (decode prioritised), then the
+    roofline check — if the mixed batch is predicted to violate τ_TBT, split
+    into decode/prefill streams with the Algorithm 1 partition.
+
+    ``static_partition=(s_p, s_d)`` disables the optimizer and always runs
+    duet mode with a fixed split (the paper's Fig. 9 ablation baseline)."""
+
+    def __init__(self, mux: AdaptiveMultiplexer, *,
+                 static_partition=None, **kw):
+        super().__init__(**kw)
+        self.mux = mux
+        self.static_partition = static_partition
+
+    def _static_decision(self, pre_loads, dec_loads):
+        from repro.core.partition import PartitionConfig, ScheduleDecision
+        s_p, s_d = self.static_partition
+        model = self.mux.model
+        if self.mux.total_units == 1:
+            from repro.core.multiplexer import _FractionalModel
+            model = _FractionalModel(model, self.mux.granularity)
+        t_mixed = model.iteration_latency(pre_loads + dec_loads,
+                                          units=s_p + s_d)
+        if not pre_loads or not dec_loads:
+            return ScheduleDecision(mode="aggregated", t_mixed=t_mixed)
+        t_d = model.iteration_latency(dec_loads, units=s_d)
+        t_p = model.iteration_latency(pre_loads, units=s_p)
+        k = max(1, min(64, int(t_p / max(t_d, 1e-9))))
+        tput = (k * len(dec_loads) + sum(r.q for r in pre_loads)) \
+            / max(k * t_d, t_p)
+        return ScheduleDecision(mode="duet", t_mixed=t_mixed,
+                                partition=PartitionConfig(
+                                    s_prefill=s_p, s_decode=s_d, k=k,
+                                    t_prefill=t_p, t_decode=t_d,
+                                    throughput=tput))
+
+    def schedule(self, state: QueueState) -> IterationPlan:
+        decode = state.running[:self.max_batch]
+        budget = self.token_budget - len(decode)
+        chunks = self._fill_prefill(state, budget,
+                                    self.max_batch - len(decode))
+        if not decode and not chunks:
+            return IterationPlan(mode="idle")
+        pre_loads = [RequestLoad(q=c, c=r.prefilled, phase="prefill")
+                     for r, c in chunks]
+        dec_loads = [RequestLoad(q=1, c=r.context_len, phase="decode")
+                     for r in decode]
+        if self.static_partition is not None:
+            decision = self._static_decision(pre_loads, dec_loads)
+        else:
+            decision = self.mux.step(pre_loads, dec_loads)
+        if decision.mode == "duet":
+            return IterationPlan(mode="duet", decode=decode, prefill=chunks,
+                                 decision=decision,
+                                 k=decision.partition.k)
+        return IterationPlan(mode="aggregated", decode=decode,
+                             prefill=chunks, decision=decision)

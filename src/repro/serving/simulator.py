@@ -1,0 +1,329 @@
+"""Discrete-event serving simulator with the roofline model as the latency
+oracle.
+
+This is how the paper's QPS-sweep evaluations (Figs. 2, 6, 7, 9; Tables 2, 3)
+are reproduced without the testbed hardware: request streams replay through
+the *actual scheduler implementations* (``repro.serving.scheduler``), and
+each engine iteration advances virtual time by the attention-aware roofline
+prediction (§4.1) — which the paper itself validates against profiled
+latency (Fig. 8, reproduced in ``benchmarks/fig8_roofline_accuracy.py``
+against real JAX execution).
+
+Instance kinds:
+  * InstanceSim   — one replica (aggregated or duet scheduling)
+  * ClusterSim    — N replicas, round-robin dispatch (Fig. 2 Agg-vLLM setup)
+  * DisaggSim     — 1P+1D phase disaggregation with KV-transfer delay
+                    (Fig. 2 Disagg-Dynamo setup, Obs. 3)
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.core.roofline import (HardwareSpec, RequestLoad, RooflineModel,
+                                 TPU_V5E)
+from repro.serving.request import Phase, Request, ServingMetrics
+from repro.serving.scheduler import (BasePolicy, ChunkedPrefillPolicy,
+                                     DuetPolicy, IterationPlan,
+                                     PrefillFirstPolicy, QueueState)
+
+
+def kv_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> int:
+    total = 0
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "attn_moe", "shared_attn"):
+            total += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+        elif kind in ("mla", "mla_moe"):
+            total += (cfg.kv_lora_rank + cfg.qk_rope_dim) * dtype_bytes
+        # recurrent blocks: O(1) state, no per-token cost
+    return total
+
+
+def kv_capacity_tokens(cfg: ArchConfig, hw: HardwareSpec, units: int,
+                       mem_fraction: float = 0.9,
+                       hbm_per_unit: float = 16e9,
+                       dtype_bytes: int = 2) -> int:
+    """Pool size after weights, mirroring the gpu-memory-utilization knob."""
+    from repro.models.params import count_params_analytical
+    weights = count_params_analytical(cfg) * dtype_bytes
+    avail = hbm_per_unit * units * mem_fraction - weights
+    per_tok = max(1, kv_bytes_per_token(cfg, dtype_bytes))
+    return max(1024, int(avail / per_tok))
+
+
+@dataclass
+class SimConfig:
+    units: int = 8                  # chips in this replica
+    tp: int = 8
+    tbt_slo: float = 0.1
+    sched_overhead: float = 0.0005  # CPU scheduling cost per iteration (s)
+    dispatch_overhead: float = 0.004  # per-iteration host dispatch (prefill
+    # kernels are host-launched; decode replays a cached program, §4.3)
+    horizon: float = 1e6
+    mem_fraction: float = 0.9
+    hbm_per_unit: float = 16e9
+
+
+class InstanceSim:
+    """One serving replica driven by a scheduling policy."""
+
+    def __init__(self, cfg: ArchConfig, policy: BasePolicy,
+                 sim: SimConfig, hw: HardwareSpec = TPU_V5E,
+                 record_trace: bool = False):
+        self.cfg = cfg
+        self.policy = policy
+        self.sim = sim
+        self.hw = hw
+        self.model = RooflineModel(cfg, hw, tp=sim.tp)
+        self.state = QueueState()
+        self.now = 0.0
+        self.finished: List[Request] = []
+        self.record_trace = record_trace
+        self.trace: List[dict] = []   # per-iteration timeline (paper Fig. 10)
+
+    # ------------------------------------------------------------------
+    def _finish(self, r: Request):
+        self.policy.release(r)
+        self.state.running.remove(r)
+        self.finished.append(r)
+
+    def _apply_aggregated(self, plan: IterationPlan):
+        pre_loads, dec_loads = plan.loads()
+        t = self.model.iteration_latency(pre_loads + dec_loads,
+                                         units=self.sim.units)
+        t += self.sim.sched_overhead
+        if plan.prefill:
+            t += self.sim.dispatch_overhead
+        if self.record_trace:
+            self.trace.append({
+                "t": self.now, "mode": "aggregated", "dur": t, "k": 1,
+                "decode_batch": len(plan.decode),
+                "prefill_tokens": sum(c for _, c in plan.prefill),
+                "sched_overhead": self.sim.sched_overhead})
+        self.now += t
+        for r in list(plan.decode):
+            r.record_token(self.now)
+            if r.done:
+                self._finish(r)
+        self._advance_prefill(plan, self.now)
+
+    def _apply_duet(self, plan: IterationPlan):
+        part = plan.decision.partition
+        k = part.k
+        span = max(k * part.t_decode, part.t_prefill) \
+            + self.sim.sched_overhead + self.sim.dispatch_overhead
+        if self.record_trace:
+            self.trace.append({
+                "t": self.now, "mode": "duet", "dur": span, "k": k,
+                "s_prefill": part.s_prefill, "s_decode": part.s_decode,
+                "t_decode": part.t_decode, "t_prefill": part.t_prefill,
+                "decode_batch": len(plan.decode),
+                "prefill_tokens": sum(c for _, c in plan.prefill),
+                "bubble": abs(k * part.t_decode - part.t_prefill),
+                "sched_overhead": self.sim.sched_overhead})
+        # decode stream: k steps, each t_decode apart (decode launches first)
+        for j in range(1, k + 1):
+            ts = self.now + j * part.t_decode
+            for r in list(plan.decode):
+                if r.done:
+                    continue
+                r.record_token(ts)
+                if r.done:
+                    self._finish(r)
+        self._advance_prefill(plan, self.now + part.t_prefill)
+        self.now += span
+
+    def _advance_prefill(self, plan: IterationPlan, ts: float):
+        for r, chunk in plan.prefill:
+            r.prefilled += chunk
+            if r.remaining_prompt <= 0:
+                # prompt fully processed -> first token sampled this iteration
+                self.state.prefilling.remove(r)
+                r.phase = Phase.DECODE
+                r.record_token(ts)
+                if r.done:
+                    self.policy.release(r)
+                    self.finished.append(r)
+                else:
+                    self.state.running.append(r)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> ServingMetrics:
+        pending = sorted(copy.deepcopy(requests), key=lambda r: r.arrival)
+        all_reqs = list(pending)
+        while ((pending or self.state.waiting or self.state.running
+                or self.state.prefilling) and self.now < self.sim.horizon):
+            self.state.admit_arrivals(pending, self.now)
+            plan = self.policy.schedule(self.state)
+            if plan.is_idle:
+                if pending:
+                    self.now = max(self.now, pending[0].arrival)
+                    continue
+                break
+            if plan.mode == "duet":
+                self._apply_duet(plan)
+            else:
+                self._apply_aggregated(plan)
+        return ServingMetrics(requests=all_reqs, duration=self.now)
+
+
+# ---------------------------------------------------------------------------
+class ClusterSim:
+    """N independent replicas with round-robin request dispatch."""
+
+    def __init__(self, make_instance, n: int):
+        self.instances = [make_instance(i) for i in range(n)]
+
+    def run(self, requests: List[Request]) -> ServingMetrics:
+        shards: List[List[Request]] = [[] for _ in self.instances]
+        for i, r in enumerate(sorted(requests, key=lambda r: r.arrival)):
+            shards[i % len(self.instances)].append(r)
+        merged = ServingMetrics()
+        for inst, shard in zip(self.instances, shards):
+            m = inst.run(shard)
+            merged.requests.extend(m.requests)
+            merged.duration = max(merged.duration, m.duration)
+        return merged
+
+
+# ---------------------------------------------------------------------------
+class DisaggSim:
+    """nP+mD disaggregation (Dynamo-like): ``n_prefill`` replicas run all
+    prefills FCFS (round-robin dispatch), ``n_decode`` replicas run
+    decode-only continuous batching. The KV cache for each finished prompt is
+    transferred over the interconnect before decode can start — the overhead
+    aggregation avoids (Obs. 3)."""
+
+    def __init__(self, cfg: ArchConfig, sim: SimConfig,
+                 hw: HardwareSpec = TPU_V5E,
+                 transfer_bw: float = 100e9,
+                 token_budget: int = 8192, max_batch: int = 1024,
+                 n_prefill: int = 1, n_decode: int = 1):
+        self.cfg = cfg
+        self.sim = sim
+        self.hw = hw
+        self.model = RooflineModel(cfg, hw, tp=sim.tp)
+        self.transfer_bw = transfer_bw
+        self.token_budget = token_budget
+        self.max_batch = max_batch
+        self.n_prefill = n_prefill
+        self.n_decode = n_decode
+        self.kv_per_tok = kv_bytes_per_token(cfg)
+        # the decode worker has the same per-chip KV pool as an aggregated
+        # replica — without this cap disaggregation gets a free lunch
+        self.kv_capacity = kv_capacity_tokens(cfg, hw, sim.units,
+                                              sim.mem_fraction,
+                                              sim.hbm_per_unit)
+
+    def run(self, requests: List[Request]) -> ServingMetrics:
+        reqs = sorted(copy.deepcopy(requests), key=lambda r: r.arrival)
+        # ---- prefill workers: FCFS round-robin, chunk budget/iteration -----
+        clocks = [0.0] * self.n_prefill
+        ready: List[tuple] = []   # (decode_ready_time, request)
+        for i, r in enumerate(reqs):
+            w = i % self.n_prefill
+            clocks[w] = max(clocks[w], r.arrival)
+            done = 0
+            while done < r.prompt_len:
+                q = min(self.token_budget, r.prompt_len - done)
+                clocks[w] += self.model.iteration_latency(
+                    [RequestLoad(q=q, c=done, phase="prefill")],
+                    units=self.sim.units) + self.sim.sched_overhead \
+                    + self.sim.dispatch_overhead
+                done += q
+            r.prefilled = r.prompt_len
+            r.record_token(clocks[w])   # first token sampled on prefill side
+            transfer = r.prompt_len * self.kv_per_tok / self.transfer_bw
+            if not r.done:
+                ready.append((clocks[w] + transfer, r))
+        t_p = max(clocks)
+        if self.n_decode > 1:
+            # split decode work across decode replicas round-robin
+            shards: List[List[tuple]] = [[] for _ in range(self.n_decode)]
+            ready.sort(key=lambda x: x[0])
+            for i, item in enumerate(ready):
+                shards[i % self.n_decode].append(item)
+            t_d = 0.0
+            for shard in shards:
+                t_d = max(t_d, self._run_decode_worker(shard))
+            return ServingMetrics(requests=reqs, duration=max(t_p, t_d))
+        t_d = self._run_decode_worker(ready)
+        return ServingMetrics(requests=reqs, duration=max(t_p, t_d))
+
+    def _run_decode_worker(self, ready: List[tuple]) -> float:
+        # decode-only continuous batching over one worker's share
+        ready = sorted(ready, key=lambda x: x[0])
+        t_d = 0.0
+        running: List[Request] = []
+        kv_in_use = 0
+        finished = []
+
+        def _kv_need(r):
+            return r.prompt_len + r.output_len
+
+        while ready or running:
+            while ready and (ready[0][0] <= t_d or not running):
+                at, r = ready[0]
+                if kv_in_use + _kv_need(r) > self.kv_capacity and running:
+                    break            # pool full: wait for completions
+                ready.pop(0)
+                t_d = max(t_d, at) if not running else t_d
+                if at <= t_d:
+                    running.append(r)
+                    kv_in_use += _kv_need(r)
+                else:
+                    ready.insert(0, (at, r))
+                    break
+            if not running:
+                if ready:
+                    t_d = ready[0][0]
+                continue
+            batch = running[:self.max_batch]
+            loads = [RequestLoad(q=1, c=r.context_len) for r in batch]
+            t_d += self.model.iteration_latency(loads, units=self.sim.units) \
+                + self.sim.sched_overhead
+            for r in list(batch):
+                r.record_token(t_d)
+                if r.done:
+                    running.remove(r)
+                    kv_in_use -= _kv_need(r)
+                    finished.append(r)
+        return t_d
+
+
+# ---------------------------------------------------------------------------
+def make_duet_instance(cfg: ArchConfig, sim: SimConfig,
+                       hw: HardwareSpec = TPU_V5E,
+                       token_budget: int = 8192,
+                       max_batch: int = 1024,
+                       unit_step: int = 1) -> InstanceSim:
+    cap = kv_capacity_tokens(cfg, hw, sim.units, sim.mem_fraction,
+                             sim.hbm_per_unit)
+    mux = AdaptiveMultiplexer(cfg, hw=hw, total_units=sim.units,
+                              tbt_slo=sim.tbt_slo, tp=sim.tp,
+                              unit_step=unit_step)
+    policy = DuetPolicy(mux, token_budget=token_budget, max_batch=max_batch,
+                        kv_capacity_tokens=cap)
+    return InstanceSim(cfg, policy, sim, hw)
+
+
+def make_baseline_instance(cfg: ArchConfig, sim: SimConfig, kind: str,
+                           hw: HardwareSpec = TPU_V5E,
+                           token_budget: int = 8192,
+                           max_batch: int = 1024) -> InstanceSim:
+    cap = kv_capacity_tokens(cfg, hw, sim.units, sim.mem_fraction,
+                             sim.hbm_per_unit)
+    if kind in ("vllm", "sglang-chunked"):
+        policy = ChunkedPrefillPolicy(token_budget=token_budget,
+                                      max_batch=max_batch,
+                                      kv_capacity_tokens=cap)
+    elif kind == "sglang-default":
+        policy = PrefillFirstPolicy(token_budget=token_budget,
+                                    max_batch=max_batch,
+                                    kv_capacity_tokens=cap)
+    else:
+        raise ValueError(kind)
+    return InstanceSim(cfg, policy, sim, hw)

@@ -1,0 +1,9 @@
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw, schedule_fn)
+from repro.training.train_loop import make_train_step, train
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_update", "init_adamw", "schedule_fn",
+    "make_train_step", "train", "load_checkpoint", "save_checkpoint",
+]

@@ -1,0 +1,54 @@
+"""Checkpointing: flat-key npz serialisation of (params, opt_state, step).
+
+Path-keyed so any pytree of jnp arrays round-trips without a schema file;
+restores onto the current device layout (resharding is the caller's concern
+via device_put with the target shardings).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None,
+                    step: int = 0) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v
+                        for k, v in _flatten(opt_state).items()})
+    payload["meta/step"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **payload)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    return path
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restore into the structure of the provided templates."""
+    data = np.load(path)
+    flat_p = _flatten(params_template)
+    restored_p = jax.tree.unflatten(
+        jax.tree.structure(params_template),
+        [jnp.asarray(data[f"params/{k}"]) for k in flat_p])
+    step = int(data["meta/step"])
+    if opt_template is None:
+        return restored_p, None, step
+    flat_o = _flatten(opt_template)
+    restored_o = jax.tree.unflatten(
+        jax.tree.structure(opt_template),
+        [jnp.asarray(data[f"opt/{k}"]) for k in flat_o])
+    return restored_p, restored_o, step

@@ -1,0 +1,100 @@
+"""Optimizers and LR schedules (no optax dependency — built on jax.tree).
+
+AdamW with decoupled weight decay; schedules: linear-warmup cosine and WSD
+(warmup–stable–decay, the MiniCPM schedule [arXiv:2404.06395] required by the
+``minicpm-2b`` assignment: constant LR plateau, then a short exponential-ish
+decay tail).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_fraction: float = 0.9    # WSD: fraction of steps at constant LR
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+        if cfg.schedule == "constant":
+            return cfg.lr * warm
+        if cfg.schedule == "cosine":
+            t = jnp.clip((step - cfg.warmup_steps)
+                         / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+            return cfg.lr * warm * 0.5 * (1 + jnp.cos(math.pi * t))
+        if cfg.schedule == "wsd":
+            stable_end = cfg.total_steps * cfg.stable_fraction
+            decay_len = max(1.0, cfg.total_steps - stable_end)
+            t = jnp.clip((step - stable_end) / decay_len, 0.0, 1.0)
+            # MiniCPM: sqrt-style rapid decay tail after the stable phase
+            return cfg.lr * warm * jnp.where(
+                step < stable_end, 1.0, 0.5 ** (10.0 * t))
+        raise ValueError(cfg.schedule)
+    return fn
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = schedule_fn(cfg)(step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), \
+        {"grad_norm": gnorm, "lr": lr}

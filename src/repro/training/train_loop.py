@@ -1,0 +1,62 @@
+"""Training step factory + loop (used by examples/train_small.py and the
+train_4k dry-run entry point).
+
+``make_train_step(model, opt_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with in/out shardings from ``repro.models.params`` — the same
+function lowers on the production mesh in ``launch/dryrun.py``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, params, data: Iterator[dict], opt_cfg: AdamWConfig,
+          num_steps: int, *, log_every: int = 10,
+          checkpoint_path: Optional[str] = None,
+          checkpoint_every: int = 0,
+          log_fn=print):
+    """Simple single-host loop; the multi-chip path goes through
+    launch/train.py which wraps the same step in pjit."""
+    from repro.training.checkpoint import save_checkpoint
+
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    history = []
+    t0 = time.time()
+    for step in range(num_steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            log_fn(f"step {step:5d} loss {loss:.4f} "
+                   f"lr {float(metrics['lr']):.2e} "
+                   f"gnorm {float(metrics['grad_norm']):.3f} "
+                   f"({time.time() - t0:.1f}s)")
+        if checkpoint_path and checkpoint_every \
+                and (step + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path, params, opt_state, step + 1)
+    return params, opt_state, history

@@ -1,0 +1,19 @@
+import dataclasses
+
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Only tests/test_dryrun_small.py spawns a subprocess with forced devices.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(cfg, **overrides):
+    """Further-shrunken config for hot loops in tests."""
+    return dataclasses.replace(cfg, **overrides)

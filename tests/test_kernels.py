@@ -1,0 +1,128 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp oracles in repro.kernels.ref (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (build_duet_schedule, pack_duet_queries,
+                           unpack_duet_output)
+from repro.kernels.duet_attention import duet_attention
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_decode import paged_decode
+from repro.kernels.ref import (duet_attention_ref, flash_prefill_ref,
+                               paged_decode_ref)
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,G,Dh,off", [
+    (1, 128, 128, 4, 2, 64, 0),
+    (2, 128, 256, 4, 4, 64, 128),     # chunked-prefill offset
+    (1, 256, 256, 8, 2, 128, 0),
+    (1, 128, 128, 4, 1, 64, 0),       # MQA
+])
+def test_flash_prefill_sweep(B, Sq, Sk, H, G, Dh, off, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, G, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, G, Dh), dtype)
+    out = flash_prefill(q, k, v, q_offset=off, interpret=True)
+    ref = flash_prefill_ref(q, k, v, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,G,Dh,N,ps,P", [
+    (2, 4, 2, 64, 16, 16, 4),
+    (3, 8, 1, 128, 32, 16, 6),        # MQA
+    (2, 4, 4, 64, 16, 8, 5),          # MHA
+])
+def test_paged_decode_sweep(B, H, G, Dh, N, ps, P, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    rng = np.random.default_rng(0)
+    q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+    kp = jax.random.normal(ks[1], (N, ps, G, Dh), dtype)
+    vp = jax.random.normal(ks[2], (N, ps, G, Dh), dtype)
+    tables = jnp.asarray(rng.integers(1, N, (B, P)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, P * ps + 1, (B,)), jnp.int32)
+    out = paged_decode(q, kp, vp, tables, lengths, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("share", [0.1, 0.3, 0.7])
+def test_duet_attention_mixed_phases(share, dtype):
+    Ns, S, H, G, Dh, bq = 4, 256, 4, 2, 64, 8
+    k_slab = jax.random.normal(jax.random.PRNGKey(0), (Ns, S, G, Dh), dtype)
+    v_slab = jax.random.normal(jax.random.PRNGKey(1), (Ns, S, G, Dh), dtype)
+    decode_rows = [(0, 100), (1, 57), (2, 200)]
+    prefill_rows = [(3, 64 + i) for i in range(20)]
+    sched = build_duet_schedule(decode_rows, prefill_rows, block_q=bq,
+                                decode_share=share)
+    num_src = len(decode_rows) + len(prefill_rows)
+    src_q = jax.random.normal(jax.random.PRNGKey(2), (num_src, H, Dh), dtype)
+    q = pack_duet_queries(sched, src_q)
+    out = duet_attention(q, jnp.asarray(sched.row_pos)[:, None],
+                         jnp.asarray(sched.tile_slot), k_slab, v_slab,
+                         block_q=bq, block_k=128, interpret=True)
+    got = unpack_duet_output(sched, out, num_src)
+    rows = decode_rows + prefill_rows
+    ref = duet_attention_ref(src_q, jnp.asarray([r[0] for r in rows]),
+                             jnp.asarray([r[1] for r in rows]),
+                             k_slab, v_slab)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_duet_schedule_interleaves_decode_first():
+    """Decode tiles must appear early/interleaved, never all trailing —
+    that ordering is the TBT guarantee of the fused launch."""
+    decode_rows = [(i, 10) for i in range(4)]
+    prefill_rows = [(7, i) for i in range(64)]
+    sched = build_duet_schedule(decode_rows, prefill_rows, block_q=8,
+                                decode_share=0.25)
+    slots = list(sched.tile_slot)
+    decode_idx = [i for i, s in enumerate(slots) if s in (0, 1, 2, 3)]
+    # decode launches first and tiles are interleaved (prefill tiles between
+    # consecutive decode tiles), never bunched together
+    assert decode_idx[0] == 0
+    gaps = [b - a for a, b in zip(decode_idx, decode_idx[1:])]
+    assert all(g > 1 for g in gaps)
+
+
+def test_flash_prefill_matches_model_attention(rng_key):
+    """Cross-validate the kernel against the model's attention layer."""
+    from repro.configs import get_config, reduced
+    from repro.models import attention as A
+
+    cfg = reduced(get_config("yi-9b"))
+    B, S = 1, 128
+    params = {
+        "w_q": 0.1 * jax.random.normal(rng_key, (cfg.d_model, cfg.num_heads,
+                                                 cfg.head_dim)),
+        "w_k": 0.1 * jax.random.normal(rng_key, (cfg.d_model,
+                                                 cfg.num_kv_heads,
+                                                 cfg.head_dim)),
+        "w_v": 0.1 * jax.random.normal(rng_key, (cfg.d_model,
+                                                 cfg.num_kv_heads,
+                                                 cfg.head_dim)),
+        "w_o": 0.1 * jax.random.normal(rng_key, (cfg.num_heads, cfg.head_dim,
+                                                 cfg.d_model)),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(9), (B, S, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out_model, cache = A.gqa_prefill(params, cfg, x, positions)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    q = A.apply_rope(q, positions, cfg.rope_theta)
+    out_kernel = flash_prefill(q, cache.k, cache.v, interpret=True)
+    out_kernel = jnp.einsum("bshe,hed->bsd", out_kernel, params["w_o"])
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_model),
+                               atol=3e-5, rtol=3e-5)

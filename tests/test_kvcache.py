@@ -1,0 +1,70 @@
+"""Paged KV cache manager + reference page ops."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kvcache import (PagedKVCacheManager, PagePoolConfig,
+                                   gather_kv, write_kv_page)
+
+
+def test_alloc_free_roundtrip():
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=17, page_size=16))
+    assert mgr.free_pages == 16
+    pages = mgr.allocate(rid=1, new_tokens=40)   # 3 pages
+    assert len(pages) == 3
+    assert mgr.length(1) == 40
+    assert mgr.free_pages == 13
+    mgr.allocate(rid=1, new_tokens=8)            # fits in page 3
+    assert len(mgr.page_table(1)) == 3
+    mgr.allocate(rid=1, new_tokens=1)            # spills to page 4
+    assert len(mgr.page_table(1)) == 4
+    mgr.free(1)
+    assert mgr.free_pages == 16
+    assert mgr.page_table(1) == []
+
+
+def test_exhaustion_raises():
+    # num_pages=6 -> 5 usable (page 0 is the reserved null page)
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=6, page_size=16))
+    mgr.allocate(1, 64)  # 4 pages
+    with pytest.raises(MemoryError):
+        mgr.allocate(2, 17)
+    assert mgr.can_allocate(2, 16)
+    assert not mgr.can_allocate(2, 17)
+
+
+def test_lookahead_reservation_all_or_nothing():
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=5, page_size=4))
+    mgr.allocate(1, 4)
+    mgr.allocate(2, 4)
+    # 2 pages free; k=4 for both rids needs 2 pages -> ok
+    assert mgr.reserve_lookahead([1, 2], k=4)
+    assert mgr.free_pages == 0
+    # nothing left
+    assert not mgr.reserve_lookahead([1], k=5)
+    mgr.commit_tokens(1, 4)
+    assert mgr.length(1) == 8
+
+
+def test_page_tables_padded():
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=9, page_size=4))
+    mgr.allocate(7, 10)
+    tbl = mgr.padded_tables([7, 8], max_pages=5)
+    assert tbl.shape == (2, 5)
+    assert (tbl[0, :3] > 0).all()
+    assert (tbl[0, 3:] == 0).all()
+    assert (tbl[1] == 0).all()
+
+
+def test_write_then_gather_roundtrip():
+    P, ps, G, dh = 8, 4, 2, 8
+    pages = jnp.zeros((P, ps, G, dh))
+    kv = jnp.arange(2 * 6 * G * dh, dtype=jnp.float32).reshape(2, 6, G, dh)
+    # tokens of request A at pages [1,2], request B at pages [3,4]
+    page_ids = jnp.asarray([[1, 1, 1, 1, 2, 2], [3, 3, 3, 3, 4, 4]])
+    offsets = jnp.asarray([[0, 1, 2, 3, 0, 1], [0, 1, 2, 3, 0, 1]])
+    pages = write_kv_page(pages, kv, page_ids, offsets)
+    outA = gather_kv(pages, jnp.asarray([1, 2]), length=6)
+    np.testing.assert_array_equal(np.asarray(outA), np.asarray(kv[0]))
+    outB = gather_kv(pages, jnp.asarray([3, 4]), length=6)
+    np.testing.assert_array_equal(np.asarray(outB), np.asarray(kv[1]))

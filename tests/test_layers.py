@@ -1,0 +1,104 @@
+"""Building-block unit tests: norms, RoPE, causal conv, embeddings, MoE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.layers import (causal_conv1d, cross_entropy, embed,
+                                 group_norm, rms_norm, unembed)
+from repro.models.moe import load_balance_loss, moe_ffn
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+    y = rms_norm(x, jnp.ones(64))
+    rms = np.sqrt(np.mean(np.asarray(y, np.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_group_norm_per_group_stats():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32)) * 5 + 3
+    y = np.asarray(group_norm(x, jnp.ones(32), num_groups=4), np.float32)
+    g = y.reshape(2, 4, 8)
+    np.testing.assert_allclose(g.mean(-1), 0.0, atol=1e-3)
+    np.testing.assert_allclose(g.var(-1), 1.0, rtol=1e-2)
+
+
+def test_causal_conv_matches_numpy():
+    B, S, C, W = 2, 10, 3, 4
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, C))
+    w = jax.random.normal(jax.random.PRNGKey(3), (W, C))
+    y, state = causal_conv1d(x, w, None)
+    xn = np.asarray(x)
+    wn = np.asarray(w)
+    ref = np.zeros((B, S, C))
+    for t in range(S):
+        for i in range(W):
+            src = t - (W - 1) + i
+            if src >= 0:
+                ref[:, t] += xn[:, src] * wn[i]
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), xn[:, -(W - 1):], atol=0)
+
+
+def test_causal_conv_streaming_equals_batch():
+    """Decode-style one-step conv with carried state == full-sequence conv."""
+    B, S, C, W = 1, 8, 2, 4
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, C))
+    w = jax.random.normal(jax.random.PRNGKey(5), (W, C))
+    full, _ = causal_conv1d(x, w, None)
+    state = None
+    outs = []
+    for t in range(S):
+        y, state = causal_conv1d(x[:, t:t + 1], w, None, state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                               np.asarray(full), atol=1e-5)
+
+
+def test_unembed_masks_padded_vocab():
+    params = {"embedding": jnp.ones((512, 8))}
+    x = jnp.ones((1, 8))
+    logits = unembed(params, x, true_vocab=500)
+    l = np.asarray(logits, np.float32)
+    assert (l[:, 500:] < -1e30).all()
+    assert np.isfinite(l[:, :500]).all()
+
+
+def test_cross_entropy_perfect_prediction():
+    logits = jnp.full((2, 4, 10), -20.0)
+    labels = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]])
+    logits = logits.at[jnp.arange(2)[:, None], jnp.arange(4)[None, :],
+                       labels].set(20.0)
+    assert float(cross_entropy(logits, labels, 10)) < 1e-3
+
+
+def test_moe_group_split_preserves_output():
+    """Group-wise routing must equal flat routing when T <= group size."""
+    import repro.models.moe as moe_mod
+    cfg = dataclasses.replace(reduced(get_config("granite-moe-3b-a800m")),
+                              capacity_factor=64.0)
+    from repro.models.params import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p = params["layers"][0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 24, cfg.d_model)) * 0.1
+    y1 = moe_ffn(p, cfg, x)
+    old = moe_mod.MOE_GROUP_SIZE
+    try:
+        moe_mod.MOE_GROUP_SIZE = 16   # force 3 groups w/ padding
+        y2 = moe_ffn(p, cfg, x)
+    finally:
+        moe_mod.MOE_GROUP_SIZE = old
+    # same expert assignment (huge capacity): outputs match
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_load_balance_loss_uniform_is_minimal():
+    T, E = 256, 8
+    uniform = jnp.zeros((T, E))
+    skewed = jnp.zeros((T, E)).at[:, 0].set(10.0)
+    assert float(load_balance_loss(uniform, 2)) < \
+        float(load_balance_loss(skewed, 2))

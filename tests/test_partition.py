@@ -1,0 +1,82 @@
+"""Algorithm 1 (partition optimizer) tests."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (RequestLoad, RooflineModel, TPU_V5E, decide,
+                        optimize_partition)
+
+CFG = get_config("qwen3-4b")
+
+
+def _workload():
+    pre = [RequestLoad(q=8192, c=0, phase="prefill")]
+    dec = [RequestLoad(q=1, c=4096) for _ in range(64)]
+    return pre, dec
+
+
+def test_partition_respects_tbt_slo():
+    m = RooflineModel(CFG, TPU_V5E)
+    pre, dec = _workload()
+    part = optimize_partition(m, pre, dec, total_units=8, tbt_slo=0.03)
+    assert part is not None
+    assert part.t_decode <= 0.03
+    assert part.s_prefill + part.s_decode == 8
+
+
+def test_partition_matches_bruteforce():
+    m = RooflineModel(CFG, TPU_V5E)
+    pre, dec = _workload()
+    tbt = 0.03
+    best = optimize_partition(m, pre, dec, total_units=8, tbt_slo=tbt)
+    # exhaustive check over every (s_d, k) pair
+    t_pre_tok = sum(r.q for r in pre)
+    t_dec_tok = sum(r.q for r in dec)
+    brute = 0.0
+    for sd in range(1, 8):
+        td = m.iteration_latency(dec, units=sd)
+        if td > tbt:
+            continue
+        tp = m.iteration_latency(pre, units=8 - sd)
+        for k in range(1, 65):
+            rho = (k * t_dec_tok + t_pre_tok) / max(k * td, tp)
+            brute = max(brute, rho)
+    # optimizer only tries k in {floor(tp/td), +1} (paper) — it must be
+    # within a small factor of the exhaustive optimum and never above it
+    assert best.throughput <= brute * (1 + 1e-9)
+    assert best.throughput >= 0.9 * brute
+
+
+def test_decide_stays_aggregated_when_slo_met():
+    m = RooflineModel(CFG, TPU_V5E)
+    dec = [RequestLoad(q=1, c=512) for _ in range(4)]
+    d = decide(m, [], dec, total_units=8, tbt_slo=1.0)
+    assert d.mode == "aggregated"
+
+
+def test_decide_triggers_duet_on_predicted_violation():
+    m = RooflineModel(CFG, TPU_V5E)
+    pre, dec = _workload()
+    d = decide(m, pre, dec, total_units=8, tbt_slo=0.03)
+    assert d.t_mixed > 0.03
+    assert d.mode == "duet"
+    assert d.partition.k >= 1
+
+
+def test_optimizer_prefers_minimal_decode_units():
+    """Paper §4.2: throughput optimization naturally assigns decode the
+    minimum units satisfying τ_TBT."""
+    m = RooflineModel(CFG, TPU_V5E)
+    pre, dec = _workload()
+    part = optimize_partition(m, pre, dec, total_units=16, tbt_slo=0.05)
+    # find the minimal feasible S_d
+    min_sd = next(sd for sd in range(1, 16)
+                  if m.iteration_latency(dec, units=sd) <= 0.05)
+    assert part.s_decode <= min_sd + 2
+
+
+def test_infeasible_returns_none():
+    m = RooflineModel(CFG, TPU_V5E)
+    dec = [RequestLoad(q=1, c=131072) for _ in range(512)]
+    pre = [RequestLoad(q=8192, c=0, phase="prefill")]
+    part = optimize_partition(m, pre, dec, total_units=2, tbt_slo=1e-5)
+    assert part is None

@@ -1,0 +1,128 @@
+"""Tests for the §Perf optimizations (EXPERIMENTS.md): scatter-vs-einsum MoE
+dispatch equivalence, padded expert parallelism, fp8 KV cache, and the
+engine on a recurrent (hybrid) architecture."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.moe as moe_mod
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.models.params import init_params, tp_adjusted_config
+
+
+def test_moe_scatter_equals_einsum(rng_key):
+    cfg = reduced(get_config("granite-moe-3b-a800m"))
+    params = init_params(cfg, rng_key)
+    p = params["layers"][0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 24, cfg.d_model)) * 0.1
+    old = moe_mod.MOE_IMPL
+    try:
+        moe_mod.MOE_IMPL = "einsum"
+        y1 = moe_mod.moe_ffn(p, cfg, x)
+        moe_mod.MOE_IMPL = "scatter"
+        y2 = moe_mod.moe_ffn(p, cfg, x)
+    finally:
+        moe_mod.MOE_IMPL = old
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_padded_experts_numerically_identical(rng_key):
+    cfg = reduced(get_config("granite-moe-3b-a800m"))
+    cfgp = dataclasses.replace(cfg, num_experts=6, num_experts_routed=4)
+    params = init_params(cfg, rng_key)
+    p = params["layers"][0]["moe"]
+    pp = dict(p)
+    pp["router"] = jnp.pad(p["router"], ((0, 0), (0, 2)))
+    for kk in ("w_gate", "w_up", "w_down"):
+        pp[kk] = jnp.pad(p[kk], ((0, 2), (0, 0), (0, 0)))
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 24, cfg.d_model)) * 0.1
+    y1 = moe_mod.moe_ffn(p, cfg, x)
+    y2 = moe_mod.moe_ffn(pp, cfgp, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_tp_adjusted_pads_experts():
+    cfg = get_config("granite-moe-3b-a800m")        # 40 experts
+    adj = tp_adjusted_config(cfg, 16, pad_experts=True)
+    assert adj.num_experts == 48
+    assert adj.num_experts_routed == 40
+    # divisible counts stay untouched
+    ds = tp_adjusted_config(get_config("deepseek-v2-lite-16b"), 16,
+                            pad_experts=True)
+    assert ds.num_experts == 64 and ds.num_experts_routed == 0
+
+
+def test_f8_kv_cache_decode_close_to_bf16(rng_key):
+    cfg = reduced(get_config("qwen3-4b"))
+    m = Model(cfg)
+    params = m.init(rng_key)
+    B, S = 2, 12
+    toks = jax.random.randint(rng_key, (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for dt in (jnp.float32, jnp.float8_e4m3fn):
+        slab = m.init_cache(B, S + 4, dtype=dt)
+        _, slab = m.prefill(params, toks[:, :S - 1], cache=slab)
+        lg, _ = m.decode_step(params, slab, toks[:, S - 1:S],
+                              jnp.full((B,), S - 1, jnp.int32))
+        outs[dt] = jax.nn.softmax(lg.astype(jnp.float32))
+    err = float(jnp.max(jnp.abs(outs[jnp.float32]
+                                - outs[jnp.float8_e4m3fn])))
+    assert err < 0.05      # fp8 quantisation noise, but same distribution
+    top1 = jnp.argmax(outs[jnp.float32], -1)
+    top1_f8 = jnp.argmax(outs[jnp.float8_e4m3fn], -1)
+    assert (np.asarray(top1) == np.asarray(top1_f8)).mean() >= 0.5
+
+
+def test_f8_mla_cache_decode(rng_key):
+    cfg = dataclasses.replace(reduced(get_config("deepseek-v2-lite-16b")),
+                              capacity_factor=64.0)
+    m = Model(cfg, mla_absorb=True)
+    params = m.init(rng_key)
+    B, S = 2, 10
+    toks = jax.random.randint(rng_key, (B, S), 0, cfg.vocab_size)
+    slab = m.init_cache(B, S + 4, dtype=jnp.float8_e4m3fn)
+    _, slab = m.prefill(params, toks[:, :S - 1], cache=slab)
+    lg, slab2 = m.decode_step(params, slab, toks[:, S - 1:S],
+                              jnp.full((B,), S - 1, jnp.int32))
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+    assert slab2[1].ckv.dtype == jnp.float8_e4m3fn   # stays quantised
+
+
+def test_engine_on_hybrid_arch(rng_key):
+    """Serving engine end-to-end on zamba2 (Mamba2 + shared attention):
+    recurrent caches ride the same slot machinery."""
+    from repro.serving import DuetEngine, EngineConfig, Request
+    cfg = reduced(get_config("zamba2-1.2b"))
+    model = Model(cfg)
+    params = model.init(rng_key)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, arrival=0.01 * i,
+                    prompt_len=int(rng.integers(16, 60)), output_len=4)
+            for i in range(4)]
+    eng = DuetEngine(model, params, EngineConfig(
+        max_slots=2, max_len=128, token_budget=32))
+    eng.submit(reqs)
+    s = eng.run().summary()
+    assert s["num_finished"] == 4
+    assert all(len(r.output_tokens) == 4 for r in reqs)
+
+
+def test_kernel_backed_decode_matches_jnp(rng_key):
+    """Model(attn_kernel=True) routes decode attention through the fused
+    duet Pallas kernel (interpret mode on CPU) — must equal the jnp path."""
+    cfg = reduced(get_config("qwen3-4b"))
+    m_ref = Model(cfg)
+    m_ker = Model(cfg, attn_kernel=True)
+    params = m_ref.init(rng_key)
+    B, S = 2, 12
+    toks = jax.random.randint(rng_key, (B, S), 0, cfg.vocab_size)
+    slab = m_ref.init_cache(B, 128)
+    _, slab = m_ref.prefill(params, toks[:, :S - 1], cache=slab)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    lg1, _ = m_ref.decode_step(params, slab, toks[:, S - 1:S], pos)
+    lg2, _ = m_ker.decode_step(params, slab, toks[:, S - 1:S], pos)
+    assert float(jnp.max(jnp.abs(lg1 - lg2))) < 1e-3

@@ -1,0 +1,135 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import RequestLoad, RooflineModel, TPU_V5E, optimize_partition
+from repro.models.moe import _capacity, route
+from repro.serving.kvcache import PagedKVCacheManager, PagePoolConfig
+
+CFG = get_config("qwen3-4b")
+MODEL = RooflineModel(CFG, TPU_V5E)
+
+# hypothesis runs under a shared 1-core budget: keep example counts modest
+FAST = settings(max_examples=25, deadline=None)
+
+
+@FAST
+@given(q=st.integers(1, 16384), c=st.integers(0, 65536),
+       units=st.integers(1, 256))
+def test_roofline_latency_positive_and_finite(q, c, units):
+    t = MODEL.iteration_latency([RequestLoad(q=q, c=c)], units=units)
+    assert 0 < t < 1e4
+
+
+@FAST
+@given(q=st.integers(1, 8192), c=st.integers(0, 32768))
+def test_roofline_monotonic_in_context(q, c):
+    t1 = MODEL.iteration_latency([RequestLoad(q=q, c=c)], units=4)
+    t2 = MODEL.iteration_latency([RequestLoad(q=q, c=c + 4096)], units=4)
+    assert t2 >= t1
+
+
+@FAST
+@given(units=st.integers(1, 128))
+def test_roofline_monotonic_in_units(units):
+    reqs = [RequestLoad(q=2048, c=0)]
+    t1 = MODEL.iteration_latency(reqs, units=units)
+    t2 = MODEL.iteration_latency(reqs, units=units + 1)
+    assert t2 <= t1 * (1 + 1e-9)
+
+
+@FAST
+@given(n_dec=st.integers(1, 64), ctx=st.integers(128, 16384),
+       prompt=st.integers(512, 16384), slo_ms=st.integers(10, 200),
+       total=st.integers(2, 32))
+def test_partition_never_violates_slo(n_dec, ctx, prompt, slo_ms, total):
+    """Every configuration Algorithm 1 returns satisfies t_d <= tau_TBT."""
+    pre = [RequestLoad(q=prompt, c=0, phase="prefill")]
+    dec = [RequestLoad(q=1, c=ctx) for _ in range(n_dec)]
+    part = optimize_partition(MODEL, pre, dec, total_units=total,
+                              tbt_slo=slo_ms / 1e3)
+    if part is not None:
+        assert part.t_decode <= slo_ms / 1e3 + 1e-12
+        assert part.s_prefill + part.s_decode == total
+        assert 1 <= part.k <= 64
+
+
+@FAST
+@given(st.data())
+def test_kv_allocator_never_double_assigns(data):
+    """Stateful property: across arbitrary alloc/free sequences, no page is
+    owned by two requests and free counts stay consistent."""
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=33, page_size=8))
+    live = {}
+    for step in range(data.draw(st.integers(1, 30))):
+        if live and data.draw(st.booleans()):
+            rid = data.draw(st.sampled_from(sorted(live)))
+            mgr.free(rid)
+            del live[rid]
+        else:
+            rid = data.draw(st.integers(0, 10))
+            n = data.draw(st.integers(1, 40))
+            if mgr.can_allocate(rid, n):
+                mgr.allocate(rid, n)
+                live[rid] = True
+        owned = [p for r in sorted(live) for p in mgr.page_table(r)]
+        assert len(owned) == len(set(owned))          # no double ownership
+        assert 0 not in owned                          # null page never given
+        assert mgr.used_pages + mgr.free_pages == 32
+
+
+@FAST
+@given(T=st.integers(1, 96), E=st.integers(2, 16), k=st.integers(1, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_moe_routing_invariants(T, E, k, seed):
+    k = min(k, E)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (T, E))
+    C = _capacity(T, E, k, 1.25)
+    dispatch, combine = route(logits, k, C)
+    d = np.asarray(dispatch)
+    c = np.asarray(combine)
+    # each (expert, slot) holds at most one token
+    assert (d.sum(axis=0) <= 1 + 1e-6).all()
+    # each token occupies at most k slots, combine weights in [0, 1]
+    assert (d.sum(axis=(1, 2)) <= k + 1e-6).all()
+    assert (c >= -1e-6).all() and (c.sum(axis=(1, 2)) <= 1 + 1e-5).all()
+    # combine weight only where dispatched
+    assert (c[~d] == 0).all()
+
+
+@FAST
+@given(pos=st.integers(0, 2000), W=st.sampled_from([16, 64, 256]))
+def test_ring_buffer_slot_mapping(pos, W):
+    """Sliding-window ring invariant: the slot for position p holds the most
+    recent position congruent to it, and exactly min(pos+1, W) slots are
+    valid."""
+    slots = np.arange(W)
+    abs_pos = pos - ((pos - slots) % W)
+    valid = abs_pos >= 0
+    assert valid.sum() == min(pos + 1, W)
+    held = abs_pos[valid]
+    assert held.max() == pos
+    assert (held > pos - W).all()
+
+
+@FAST
+@given(B=st.integers(1, 4), S=st.integers(2, 24), seed=st.integers(0, 99))
+def test_rope_relative_position_property(B, S, seed):
+    """RoPE dot products depend only on relative position: shifting all
+    positions by a constant leaves q·k scores unchanged."""
+    from repro.models.layers import apply_rope
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (B, S, 2, 32))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    s1 = jnp.einsum("bshd,bthd->bhst", apply_rope(q, pos, 1e4),
+                    apply_rope(k, pos, 1e4))
+    s2 = jnp.einsum("bshd,bthd->bhst", apply_rope(q, pos + 37, 1e4),
+                    apply_rope(k, pos + 37, 1e4))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)

@@ -1,0 +1,98 @@
+"""Scheduler policy tests: budget filling, decode priority, duet trigger."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.serving.request import Phase, Request
+from repro.serving.scheduler import (ChunkedPrefillPolicy, DuetPolicy,
+                                     PrefillFirstPolicy, QueueState)
+
+CFG = get_config("qwen3-4b")
+
+
+def _req(rid, prompt, out=16, arrival=0.0):
+    return Request(rid=rid, arrival=arrival, prompt_len=prompt,
+                   output_len=out)
+
+
+def test_chunked_prefill_budget_and_decode_priority():
+    pol = ChunkedPrefillPolicy(token_budget=100, max_batch=16)
+    st = QueueState()
+    st.running = [_req(i, 10) for i in range(10)]           # decode reqs
+    st.waiting = [_req(100, 500)]
+    plan = pol.schedule(st)
+    # decode first
+    assert len(plan.decode) == 10
+    # remaining budget chunks the prefill: 100 - 10 = 90
+    assert len(plan.prefill) == 1
+    assert plan.prefill[0][1] == 90
+    assert plan.prefill[0][0].rid == 100
+
+
+def test_max_batch_caps_total_sequences():
+    pol = ChunkedPrefillPolicy(token_budget=100, max_batch=16)
+    st = QueueState()
+    st.running = [_req(i, 10) for i in range(30)]
+    st.waiting = [_req(100, 500)]
+    plan = pol.schedule(st)
+    assert len(plan.decode) == 16          # capped by max_batch
+    assert len(plan.prefill) == 0          # no sequence slots left
+
+
+def test_chunked_prefill_chunks_across_iterations():
+    pol = ChunkedPrefillPolicy(token_budget=64, max_batch=8)
+    st = QueueState()
+    st.waiting = [_req(1, 150)]
+    chunks = []
+    for _ in range(3):
+        plan = pol.schedule(st)
+        r, c = plan.prefill[0]
+        chunks.append(c)
+        r.prefilled += c
+    assert chunks == [64, 64, 22]
+
+
+def test_admission_respects_kv_capacity():
+    pol = ChunkedPrefillPolicy(token_budget=1000, max_batch=8,
+                               kv_capacity_tokens=600)
+    st = QueueState()
+    st.waiting = [_req(1, 400, out=100), _req(2, 400, out=100)]
+    plan = pol.schedule(st)
+    assert len(plan.prefill) == 1          # second request doesn't fit
+    pol.release(plan.prefill[0][0])
+    assert pol.kv_in_use == 0
+
+
+def test_prefill_first_policy_runs_prefill_only():
+    pol = PrefillFirstPolicy(token_budget=1000, max_batch=8)
+    st = QueueState()
+    st.running = [_req(i, 10) for i in range(4)]
+    st.waiting = [_req(100, 500)]
+    plan = pol.schedule(st)
+    assert plan.prefill and not plan.decode   # SGLang-default behaviour
+
+
+def test_duet_policy_triggers_on_contention():
+    mux = AdaptiveMultiplexer(CFG, total_units=8, tbt_slo=0.02, tp=1)
+    pol = DuetPolicy(mux, token_budget=8192, max_batch=256)
+    st = QueueState()
+    st.running = [_req(i, 128, out=64) for i in range(32)]
+    for r in st.running:
+        r.prefilled = 4096
+        r.phase = Phase.DECODE
+    st.waiting = [_req(100, 8192)]
+    plan = pol.schedule(st)
+    assert plan.mode == "duet"
+    assert plan.k >= 1
+    assert plan.decision.partition.t_decode <= 0.02
+
+
+def test_duet_policy_stays_aggregated_when_light():
+    mux = AdaptiveMultiplexer(CFG, total_units=8, tbt_slo=1.0, tp=1)
+    pol = DuetPolicy(mux, token_budget=512, max_batch=16)
+    st = QueueState()
+    st.running = [_req(0, 32)]
+    st.running[0].phase = Phase.DECODE
+    st.running[0].prefilled = 32
+    plan = pol.schedule(st)
+    assert plan.mode == "aggregated"

@@ -1,0 +1,33 @@
+"""Trace synthesis tests (Table 1 statistics, Poisson arrivals)."""
+import numpy as np
+import pytest
+
+from repro.serving.traces import TRACES, synth_trace, synthetic_fixed
+
+
+@pytest.mark.parametrize("name", list(TRACES))
+def test_trace_means_match_table1(name):
+    spec = TRACES[name]
+    reqs = synth_trace(name, 4000, qps=10.0, seed=0)
+    isl = np.array([r.prompt_len for r in reqs])
+    osl = np.array([r.output_len for r in reqs])
+    # lognormal + clipping: means within 20% of the published values
+    assert abs(isl.mean() - spec.mean_isl) / spec.mean_isl < 0.2
+    assert abs(osl.mean() - spec.mean_osl) / spec.mean_osl < 0.2
+
+
+def test_poisson_arrivals():
+    reqs = synth_trace("azure-conv", 5000, qps=8.0, seed=1)
+    gaps = np.diff([r.arrival for r in reqs])
+    assert gaps.mean() == pytest.approx(1 / 8.0, rel=0.1)
+    # exponential gaps: CV ~ 1
+    assert gaps.std() / gaps.mean() == pytest.approx(1.0, rel=0.15)
+
+
+def test_determinism_and_fixed_workload():
+    a = synth_trace("mooncake", 50, qps=2.0, seed=42)
+    b = synth_trace("mooncake", 50, qps=2.0, seed=42)
+    assert [(r.prompt_len, r.output_len, r.arrival) for r in a] == \
+        [(r.prompt_len, r.output_len, r.arrival) for r in b]
+    f = synthetic_fixed(10, qps=1.0, isl=8000, osl=200)
+    assert all(r.prompt_len == 8000 and r.output_len == 200 for r in f)
