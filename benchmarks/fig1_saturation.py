@@ -29,9 +29,14 @@ def linear_knee(d: int = 4096):
     return rows, knee
 
 
+# Engine-matching paged-KV geometry: attention streams whole pages, so the
+# predictor pads each request's context to a page multiple (DESIGN.md §3).
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE as PAGE_SIZE
+
+
 def prefill_latency_compositions(budget: int = 8192):
     cfg = get_config(DEFAULT_ARCH)
-    m = RooflineModel(cfg, TPU_V5E)
+    m = RooflineModel(cfg, TPU_V5E, page_size=PAGE_SIZE)
     comps = {
         "8x1024": [RequestLoad(q=1024, c=0, phase="prefill")] * 8,
         "4x2048": [RequestLoad(q=2048, c=0, phase="prefill")] * 4,
@@ -55,7 +60,7 @@ def prefill_latency_compositions(budget: int = 8192):
 
 def decode_latency_vs_context(budget: int = 8):
     cfg = get_config(DEFAULT_ARCH)
-    m = RooflineModel(cfg, TPU_V5E)
+    m = RooflineModel(cfg, TPU_V5E, page_size=PAGE_SIZE)
     out = {}
     for ctx in (1024, 4096, 16384, 65536):
         out[ctx] = m.decode_latency(budget, ctx, units=1)

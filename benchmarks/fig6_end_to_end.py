@@ -12,6 +12,7 @@ accordingly, the qualitative claims are the reproduction target:
 from __future__ import annotations
 
 from repro.configs import get_config
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE
 from repro.serving.simulator import SimConfig
 from repro.serving.traces import synth_trace
 from benchmarks.common import DEFAULT_ARCH, emit, sweep_policies
@@ -29,8 +30,11 @@ def run(quick: bool = True):
     for trace, qps_list in QPS.items():
         for qps in (qps_list[1::2] if quick else qps_list):
             reqs = synth_trace(trace, n_req, qps=qps, seed=0)
+            # page_size matches the engine's paged-KV pools so predicted and
+            # executed iterations share the same KV-read geometry
             rows = sweep_policies(cfg, reqs,
-                                  SimConfig(units=1, tp=1, tbt_slo=0.1))
+                                  SimConfig(units=1, tp=1, tbt_slo=0.1,
+                                            page_size=DEFAULT_PAGE_SIZE))
             for pol, m in rows.items():
                 emit(f"fig6_{trace}_{pol}_ttft_s_qps{qps}",
                      m["mean_ttft_s"])

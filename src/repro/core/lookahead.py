@@ -20,6 +20,18 @@ import jax.numpy as jnp
 from repro.models.transformer import Model
 
 
+def _freeze_inactive(new_cache, old_cache, active_mask: jax.Array):
+    """Keep inactive slots' per-slot cache/state rows untouched. Every leaf
+    is batch-leading (paged pools are not routed through here — their
+    inactive writes land in the reserved null page instead)."""
+
+    def merge(new, old):
+        m = active_mask.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(merge, new_cache, old_cache)
+
+
 def _sample(logits: jax.Array, key: jax.Array, temperature: float):
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -57,14 +69,58 @@ def lookahead_decode(model: Model, params, cache, first_token: jax.Array,
         nxt = _sample(logits, step_key, temperature)[:, None]
         nxt = jnp.where(active_mask[:, None], nxt, tok)
         new_pos = jnp.where(active_mask, pos + 1, pos)
-        # freeze cache updates for inactive slots is implicit: their written
-        # slot is overwritten identically next step (pos unchanged).
+        # freeze ALL per-slot cache rows of inactive slots. The KV slab write
+        # would be rewritten identically next step (pos unchanged), but a
+        # stale pos can point into a row now owned by a mid-prefill request,
+        # and recurrent (mamba/xLSTM) state integrates every step — both
+        # must be masked back to their previous values.
+        new_cache = _freeze_inactive(new_cache, cache, active_mask)
         return (nxt, new_pos, new_cache), nxt[:, 0]
 
     keys = jax.random.split(key, k)
     (last, pos, cache), toks = jax.lax.scan(
         step, (first_token, start_pos, cache), keys)
     return toks.T, cache, pos
+
+
+def lookahead_decode_paged(model: Model, params, pools, state,
+                           first_token: jax.Array, start_pos: jax.Array,
+                           tables: jax.Array, k: int, *,
+                           key: Optional[jax.Array] = None,
+                           temperature: float = 0.0,
+                           active_mask: Optional[jax.Array] = None):
+    """Paged-KV variant of :func:`lookahead_decode`: k fused decode steps
+    against per-layer page pools with fixed block tables. The engine's
+    look-ahead reservation guarantees every (page, slot) address touched by
+    the k steps is already allocated, so ``tables`` stays constant across
+    the scan — the host never syncs mid-program (§4.3).
+
+    Returns (tokens (B, k), pools, state, new_pos (B,)).
+    """
+    B = first_token.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if active_mask is None:
+        active_mask = jnp.ones((B,), bool)
+
+    def step(carry, step_key):
+        tok, pos, pools, state = carry
+        old_state = state
+        logits, pools, state = model.decode_step_paged(
+            params, pools, state, tok, pos, tables)
+        nxt = _sample(logits, step_key, temperature)[:, None]
+        nxt = jnp.where(active_mask[:, None], nxt, tok)
+        new_pos = jnp.where(active_mask, pos + 1, pos)
+        # attention KV of inactive slots is safe by construction (all-zero
+        # table rows write into the reserved null page), but recurrent state
+        # integrates every step and must be frozen explicitly.
+        state = _freeze_inactive(state, old_state, active_mask)
+        return (nxt, new_pos, pools, state), nxt[:, 0]
+
+    keys = jax.random.split(key, k)
+    (last, pos, pools, state), toks = jax.lax.scan(
+        step, (first_token, start_pos, pools, state), keys)
+    return toks.T, pools, state, pos
 
 
 def make_lookahead_fn(model: Model, k: int, *, temperature: float = 0.0,
@@ -78,5 +134,20 @@ def make_lookahead_fn(model: Model, k: int, *, temperature: float = 0.0,
     def run(params, cache, first_token, start_pos, key, active_mask):
         return fn(params, cache, first_token, start_pos, key=key,
                   active_mask=active_mask)
+
+    return run
+
+
+def make_paged_lookahead_fn(model: Model, k: int, *,
+                            temperature: float = 0.0):
+    """jit-compiled k-step paged decode program (one per k)."""
+    fn = functools.partial(lookahead_decode_paged, model, k=k,
+                           temperature=temperature)
+
+    @jax.jit
+    def run(params, pools, state, first_token, start_pos, tables, key,
+            active_mask):
+        return fn(params, pools, state, first_token, start_pos, tables,
+                  key=key, active_mask=active_mask)
 
     return run

@@ -48,7 +48,7 @@ class AdaptiveMultiplexer:
                  total_units: int = 256, tbt_slo: float = 0.1, tp: int = 1,
                  unit_step: int = 1, granularity: int = 64,
                  sliding_window: Optional[int] = None,
-                 mla_absorb: bool = False):
+                 mla_absorb: bool = False, page_size: int = 1):
         self.cfg = cfg
         self.hw = hw
         self.total_units = total_units
@@ -56,7 +56,8 @@ class AdaptiveMultiplexer:
         self.unit_step = unit_step
         self.model = RooflineModel(cfg, hw, tp=tp,
                                    sliding_window=sliding_window,
-                                   mla_absorb=mla_absorb)
+                                   mla_absorb=mla_absorb,
+                                   page_size=page_size)
         self.stats = MultiplexerStats()
         # profiled partition curves (analytic on TPU; table kept for parity
         # with the paper's init-time profiling step)

@@ -119,13 +119,24 @@ class RooflineModel:
     def __init__(self, cfg: ArchConfig, hw: HardwareSpec = TPU_V5E, *,
                  tp: int = 1, dtype_bytes: int = 2,
                  mla_absorb: bool = False,
-                 sliding_window: Optional[int] = None):
+                 sliding_window: Optional[int] = None,
+                 page_size: int = 1):
         self.cfg = cfg
         self.hw = hw
         self.tp = tp
         self.b = dtype_bytes
         self.mla_absorb = mla_absorb
         self.sliding_window = sliding_window
+        # paged-KV geometry: attention streams whole pages, so per-request
+        # KV read traffic rounds the context up to a page multiple.
+        # page_size=1 models contiguous (slab) KV exactly as before.
+        self.page_size = max(1, page_size)
+
+    def _page_pad(self, ctx: np.ndarray) -> np.ndarray:
+        if self.page_size == 1:
+            return ctx
+        ps = float(self.page_size)
+        return np.ceil(ctx / ps) * ps
 
     # ----------------------------------------------------------- token level
     def _block_token_cost(self, kind: str, n: int) -> OpCost:
@@ -201,22 +212,23 @@ class RooflineModel:
             if self.sliding_window is not None:
                 ctx = np.minimum(ctx, self.sliding_window + q)
             F = 4.0 * H * q * ctx * dh + 2.0 * H * q * ctx
-            B = 2.0 * H * q * dh * b + 2.0 * G * ctx * dh * b
+            B = 2.0 * H * q * dh * b + 2.0 * G * self._page_pad(ctx) * dh * b
             return F, B
         if kind in ("mla", "mla_moe"):
             H = cfg.num_heads
             r, nope, rope, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
                                  cfg.qk_rope_dim, cfg.v_head_dim)
             ctx = q + c
+            ctx_rd = self._page_pad(ctx)
             if self.mla_absorb:
                 F = (2.0 * H * q * r * nope + 2.0 * H * q * ctx * (r + rope)
                      + 2.0 * H * q * ctx * r + 2.0 * H * q * r * vd)
-                B = ctx * (r + rope) * b + 2.0 * H * q * (nope + rope) * b
+                B = ctx_rd * (r + rope) * b + 2.0 * H * q * (nope + rope) * b
             else:
                 F = (2.0 * ctx * r * H * (nope + vd)
                      + 2.0 * H * q * ctx * (nope + rope + vd)
                      + 2.0 * H * q * ctx)
-                B = ctx * (r + rope) * b + 2.0 * H * ctx * (nope + vd) * b
+                B = ctx_rd * (r + rope) * b + 2.0 * H * ctx * (nope + vd) * b
             return F, B
         if kind == "mamba2":
             h, p, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state

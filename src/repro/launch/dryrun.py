@@ -160,6 +160,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):   # older jax: one dict per computation
+        cost = cost[0]
     mem = compiled.memory_analysis()
     mem_rec = {}
     if mem is not None:

@@ -294,6 +294,107 @@ def mla_prefill_cached(params: dict, cfg: ArchConfig, x: jax.Array,
     return out, MLACache(ckv=ckv_store, krope=krope_store)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV (PagedAttention layout) — serving-engine decode/prefill paths.
+# Device pools live in repro.serving.kvcache (init_page_pools); the helpers
+# here derive (page, slot) addresses from per-request block tables.
+# ---------------------------------------------------------------------------
+def _paged_write(pages: jax.Array, new: jax.Array, table: jax.Array,
+                 positions: jax.Array) -> jax.Array:
+    """Scatter per-token values (B, T, ...) into pages at the addresses
+    implied by absolute ``positions`` (B, T) and block ``table`` (B, P).
+    Rows whose table is all zeros (inactive slots) land in the reserved
+    null page 0 and are never read back."""
+    P = table.shape[1]
+    ps = pages.shape[1]
+    pidx = jnp.clip(positions // ps, 0, P - 1)
+    page_ids = jnp.take_along_axis(table, pidx, axis=1)
+    offs = positions % ps
+    flat = new.reshape((-1,) + new.shape[2:])
+    return pages.at[page_ids.reshape(-1), offs.reshape(-1)].set(
+        flat.astype(pages.dtype))
+
+
+def _paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """(pages (N,ps,...), table (B,P)) -> (B, P*ps, ...). A request's pages
+    are table-ordered and filled densely, so flat index t == absolute
+    position t."""
+    B, P = table.shape
+    ps = pages.shape[1]
+    return pages[table].reshape((B, P * ps) + pages.shape[2:])
+
+
+def gqa_decode_paged(params: dict, cfg: ArchConfig, x: jax.Array,
+                     k_pages: jax.Array, v_pages: jax.Array,
+                     table: jax.Array, pos: jax.Array, *,
+                     use_kernel: bool = False, interpret: bool = True):
+    """One-token decode against the paged KV pool.
+
+    x (B,1,D); table (B,P) int32 page ids; pos (B,) absolute write position.
+    The page covering ``pos`` must already be allocated — the engine's
+    look-ahead reservation (§4.3, DESIGN.md §3) guarantees it for all k
+    fused steps, so ``table`` is constant inside the fused decode program.
+    ``use_kernel`` routes the read through the Pallas paged_decode kernel.
+    """
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    k_pages = _paged_write(k_pages, k, table, pos[:, None])
+    v_pages = _paged_write(v_pages, v, table, pos[:, None])
+    lengths = pos + 1
+    if use_kernel:
+        from repro.kernels.paged_decode import paged_decode as _pd
+        rows = _pd(q[:, 0], k_pages.astype(q.dtype), v_pages.astype(q.dtype),
+                   table, lengths, interpret=interpret)
+    else:
+        kg = _paged_gather(k_pages, table).astype(q.dtype)
+        vg = _paged_gather(v_pages, table).astype(q.dtype)
+        scores = _gqa_scores(q, kg) / jnp.sqrt(cfg.head_dim).astype(
+            jnp.float32)
+        valid = jnp.arange(kg.shape[1])[None, :] < lengths[:, None]
+        probs = _softmax(scores, valid[:, None, None, None, :])
+        rows = _gqa_combine(probs, vg).astype(x.dtype)[:, 0]
+    out = jnp.einsum("bhe,hed->bd", rows, params["w_o"])[:, None, :]
+    return out, (k_pages, v_pages)
+
+
+def gqa_prefill_paged(params: dict, cfg: ArchConfig, x: jax.Array,
+                      positions: jax.Array, k_pages: jax.Array,
+                      v_pages: jax.Array, table: jax.Array):
+    """Chunked prefill against the paged pool: write the chunk's K/V into
+    the request's pages, attend chunk queries over the gathered table
+    (previous chunks + this chunk). x (B,L,D); positions (B,L) absolute."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_pages = _paged_write(k_pages, k, table, positions)
+    v_pages = _paged_write(v_pages, v, table, positions)
+    kg = _paged_gather(k_pages, table).astype(q.dtype)
+    vg = _paged_gather(v_pages, table).astype(q.dtype)
+    kpos = jnp.arange(kg.shape[1])
+
+    def mask_fn(px):
+        return (kpos[None, None, :] <= px[:, :, None]) \
+            & (px[:, :, None] >= 0)
+
+    L = x.shape[1]
+    if L > ATTN_BLOCK_Q:
+        out = _blockwise_gqa(q, kg, vg, positions, mask_fn)
+    else:
+        scores = _gqa_scores(q, kg) / jnp.sqrt(cfg.head_dim).astype(
+            jnp.float32)
+        probs = _softmax(scores, mask_fn(positions)[:, None, None, :, :])
+        out = _gqa_combine(probs, vg).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"])
+    return out, (k_pages, v_pages)
+
+
 def gqa_decode_kernel(params: dict, cfg: ArchConfig, x: jax.Array,
                       cache: AttnCache, pos: jax.Array, *,
                       block_k: int = 128, interpret: bool = True):
@@ -408,8 +509,16 @@ def mla_decode(params: dict, cfg: ArchConfig, x: jax.Array, cache: MLACache,
     krope = krope_store.astype(x.dtype)
     S = ckv.shape[1]
     valid = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
-    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    out = _mla_decode_core(params, cfg, x, q_nope, q_rope, ckv, krope,
+                           valid, absorb)
+    return out, MLACache(ckv=ckv_store, krope=krope_store)
 
+
+def _mla_decode_core(params, cfg, x, q_nope, q_rope, ckv, krope, valid,
+                     absorb):
+    """Shared single-token MLA attention over (gathered) latents."""
+    B = x.shape[0]
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
     rope_scores = jnp.einsum("bshe,bte->bhst", q_rope, krope,
                              preferred_element_type=jnp.float32)
     if absorb:
@@ -430,5 +539,49 @@ def mla_decode(params: dict, cfg: ArchConfig, x: jax.Array, cache: MLACache,
         probs = _softmax(scores, valid)
         out = jnp.einsum("bhst,bthe->bshe", probs,
                          v.astype(jnp.float32)).astype(x.dtype)
-    out = out.reshape(B, 1, -1) @ params["w_o"]
-    return out, MLACache(ckv=ckv_store, krope=krope_store)
+    return out.reshape(B, 1, -1) @ params["w_o"]
+
+
+def mla_decode_paged(params: dict, cfg: ArchConfig, x: jax.Array,
+                     ckv_pages: jax.Array, krope_pages: jax.Array,
+                     table: jax.Array, pos: jax.Array, *,
+                     absorb: bool = False):
+    """One-token MLA decode against paged latent pools
+    (ckv_pages (N,ps,r), krope_pages (N,ps,rope))."""
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_prefill(
+        params, cfg, x, pos[:, None])
+    ckv_pages = _paged_write(ckv_pages, ckv_new, table, pos[:, None])
+    krope_pages = _paged_write(krope_pages, krope_new, table, pos[:, None])
+    ckv = _paged_gather(ckv_pages, table).astype(x.dtype)
+    krope = _paged_gather(krope_pages, table).astype(x.dtype)
+    S = ckv.shape[1]
+    valid = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
+    out = _mla_decode_core(params, cfg, x, q_nope, q_rope, ckv, krope,
+                           valid, absorb)
+    return out, (ckv_pages, krope_pages)
+
+
+def mla_prefill_paged(params: dict, cfg: ArchConfig, x: jax.Array,
+                      positions: jax.Array, ckv_pages: jax.Array,
+                      krope_pages: jax.Array, table: jax.Array):
+    """Chunked MLA prefill against paged latent pools."""
+    B, L, _ = x.shape
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv_prefill(params, cfg, x,
+                                                          positions)
+    ckv_pages = _paged_write(ckv_pages, ckv_new, table, positions)
+    krope_pages = _paged_write(krope_pages, krope_new, table, positions)
+    ckv = _paged_gather(ckv_pages, table).astype(x.dtype)
+    krope = _paged_gather(krope_pages, table).astype(x.dtype)
+    k_nope = jnp.einsum("btr,rhe->bthe", ckv, params["w_uk"])
+    v = jnp.einsum("btr,rhe->bthe", ckv, params["w_uv"])
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (jnp.einsum("bshe,bthe->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope, krope,
+                           preferred_element_type=jnp.float32)) * scale
+    S = ckv.shape[1]
+    valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]
+    probs = _softmax(scores, valid[:, None, :, :])
+    out = jnp.einsum("bhst,bthe->bshe", probs, v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, L, -1) @ params["w_o"]
+    return out, (ckv_pages, krope_pages)

@@ -255,7 +255,8 @@ def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
 
 def count_params_analytical(cfg: ArchConfig, active_only: bool = False) -> int:
     total = 0
-    for leafpath, d in jax.tree.leaves_with_path(layout(cfg), is_leaf=_is_def):
+    for leafpath, d in jax.tree_util.tree_leaves_with_path(
+            layout(cfg), is_leaf=_is_def):
         n = math.prod(d.shape)
         if active_only and d.axes and d.axes[0] == "experts":
             n = n * (cfg.moe_top_k / cfg.num_experts)

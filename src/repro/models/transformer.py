@@ -89,6 +89,13 @@ class Model:
         return logits
 
     # ---------------------------------------------------------------- blocks
+    def _mlp_block(self, p, kind, x):
+        """Post-attention MLP/MoE residual shared by every decode path."""
+        h = rms_norm(x, p["mlp_norm"], self.cfg.norm_eps)
+        if kind in ("attn_moe", "mla_moe"):
+            return x + moe_ffn(p["moe"], self.cfg, h)
+        return x + gated_mlp(p["mlp"], h, self.cfg.activation)
+
     def _block_params(self, params, i):
         kind = self.cfg.block_pattern[i]
         if kind == "shared_attn":
@@ -211,6 +218,104 @@ class Model:
         logits = self._logits(params, x[:, -1:])
         return logits[:, 0], new_cache
 
+    # ------------------------------------------------------------ paged serve
+    def prefill_paged(self, params, tokens, pools, state, tables, *,
+                      start_pos=None):
+        """Chunked prefill with paged attention KV (PagedAttention layout).
+
+        ``pools``: per-layer device page pools (None for recurrent layers);
+        ``state``: per-slot cache for recurrent layers (None for attention);
+        ``tables`` (B, P) int32 block tables covering the chunk's positions.
+        Returns (last_position_logits, pools, state).
+        """
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            raise NotImplementedError("paged serving covers text frontends")
+        x, _ = self._embed(params, tokens)
+        B, S = x.shape[:2]
+        if start_pos is None:
+            start = jnp.zeros((B,), jnp.int32)
+        else:
+            start = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
+        positions = start[:, None] + jnp.arange(S)[None, :]
+        new_pools, new_state = [], []
+        for i in range(cfg.num_layers):
+            p, _ = self._block_params(params, i)
+            kind = cfg.block_pattern[i]
+            if kind in ATTN_KINDS:
+                h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+                out, pool = attn_mod.gqa_prefill_paged(
+                    p["attn"], cfg, h, positions, *pools[i], tables)
+                x = self._mlp_block(p, kind, x + out)
+                new_pools.append(pool)
+                new_state.append(None)
+            elif kind in MLA_KINDS:
+                h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+                out, pool = attn_mod.mla_prefill_paged(
+                    p["attn"], cfg, h, positions, *pools[i], tables)
+                x = self._mlp_block(p, kind, x + out)
+                new_pools.append(pool)
+                new_state.append(None)
+            else:
+                x, c = self._run_block_prefill(params, i, x, positions,
+                                               state[i])
+                new_pools.append(None)
+                new_state.append(c)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], new_pools, new_state
+
+    def decode_step_paged(self, params, pools, state, token, pos, tables):
+        """One decode step against paged attention KV. token (B,1);
+        pos (B,) int32; tables (B,P). Returns (logits, pools, state)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            raise NotImplementedError("paged serving covers text frontends")
+        x = jnp.take(params["embedding"], token, axis=0)
+        new_pools, new_state = [], []
+        for i in range(cfg.num_layers):
+            p, _ = self._block_params(params, i)
+            kind = cfg.block_pattern[i]
+            if kind in ATTN_KINDS:
+                h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+                out, pool = attn_mod.gqa_decode_paged(
+                    p["attn"], cfg, h, *pools[i], tables, pos,
+                    use_kernel=self.attn_kernel)
+                x = self._mlp_block(p, kind, x + out)
+                new_pools.append(pool)
+                new_state.append(None)
+            elif kind in MLA_KINDS:
+                h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+                out, pool = attn_mod.mla_decode_paged(
+                    p["attn"], cfg, h, *pools[i], tables, pos,
+                    absorb=self.mla_absorb)
+                x = self._mlp_block(p, kind, x + out)
+                new_pools.append(pool)
+                new_state.append(None)
+            elif kind == "mamba2":
+                h = rms_norm(x, p["norm"], cfg.norm_eps)
+                out, c = ssm_mod.mamba2_decode(p["mamba"], cfg, h, state[i])
+                x = x + out
+                new_pools.append(None)
+                new_state.append(c)
+            elif kind == "mlstm":
+                h = rms_norm(x, p["norm"], cfg.norm_eps)
+                out, c = xlstm_mod.mlstm_decode(p["mlstm"], cfg, h, state[i])
+                x = x + out
+                new_pools.append(None)
+                new_state.append(c)
+            elif kind == "slstm":
+                h = rms_norm(x, p["norm"], cfg.norm_eps)
+                out, c = xlstm_mod.slstm_forward(p["slstm"], cfg, h, state[i])
+                x = x + out
+                new_pools.append(None)
+                new_state.append(c)
+            else:
+                raise ValueError(kind)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_pools, new_state
+
     def decode_step(self, params, cache, token, pos, *, sliding=False):
         """One decode step. token (B,1) (audio: (B,K,1)); pos (B,) int32.
         Returns (logits (B, V) or (B,K,V), new_cache)."""
@@ -273,6 +378,14 @@ class Model:
                    *, sliding: bool = False):
         return _build_cache(self.cfg, batch, max_len, dtype, sliding,
                             concrete=True)
+
+    def init_state_cache(self, batch: int, dtype=jnp.float32):
+        """Per-slot cache for paged serving: attention/MLA entries are None
+        (their KV lives in the device page pools), recurrent layers keep
+        their O(1) per-slot state."""
+        full = _build_cache(self.cfg, batch, 1, dtype, False, concrete=True)
+        return [None if kind in ATTN_KINDS or kind in MLA_KINDS else c
+                for kind, c in zip(self.cfg.block_pattern, full)]
 
 
 # ---------------------------------------------------------------------------

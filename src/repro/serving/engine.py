@@ -1,14 +1,25 @@
 """Real-JAX DuetServe engine: continuous batching with chunked prefill,
-adaptive duet multiplexing, paged-KV accounting, and interruption-free
+adaptive duet multiplexing, paged-KV execution, and interruption-free
 look-ahead decode (fused k-step jitted programs, §4.3).
 
 Execution vs time accounting: the engine *computes real tokens* with the JAX
-model (slot-batched slab cache, greedy/temperature sampling). Because this
-container is CPU-only while the serving target is TPU v5e, the engine clock
-advances by the attention-aware roofline prediction — the same oracle the
-paper's scheduler uses and validates (Fig. 8; reproduced against real JAX
-wall-time in benchmarks/fig8). Metrics (TTFT/TBT/throughput) are therefore
-TPU-scale while every generated token is real.
+model (greedy/temperature sampling). Because this container is CPU-only while
+the serving target is TPU v5e, the engine clock advances by the
+attention-aware roofline prediction — the same oracle the paper's scheduler
+uses and validates (Fig. 8; reproduced against real JAX wall-time in
+benchmarks/fig8). Metrics (TTFT/TBT/throughput) are therefore TPU-scale while
+every generated token is real.
+
+KV memory (DESIGN.md §3): by default attention KV lives in per-layer device
+page pools (PagedAttention layout) addressed through per-request block
+tables; admission is page-granular against the live
+:class:`PagedKVCacheManager`, look-ahead decode preallocates pages for all k
+fused steps, and under pool pressure the engine first shrinks k, then
+preempts a victim (free its pages, requeue for recompute-from-prompt).
+``EngineConfig(paged=False)`` keeps the fixed-slot slab cache as the
+equivalence oracle — there ``max_slots x max_len`` is a hard per-request and
+aggregate ceiling, while the paged path serves any request whose footprint
+fits the pool.
 
 Duet mode on a single chip uses the fused duet-attention kernel's grid
 partitioning (kernel-level analogue of SM masking — DESIGN.md §2); across
@@ -17,18 +28,19 @@ chips the launcher splits the mesh instead (launch/serve.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.lookahead import make_lookahead_fn
+from repro.core.lookahead import make_lookahead_fn, make_paged_lookahead_fn
 from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import HardwareSpec, TPU_V5E
 from repro.models.transformer import Model
-from repro.serving.kvcache import PagedKVCacheManager, PagePoolConfig
+from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, PagedKVCacheManager,
+                                   PagePoolConfig, init_page_pools)
 from repro.serving.request import Phase, Request, ServingMetrics
 from repro.serving.scheduler import DuetPolicy, IterationPlan, QueueState
 
@@ -45,15 +57,20 @@ def _k_bucket(k: int) -> int:
 @dataclass
 class EngineConfig:
     max_slots: int = 8           # concurrent requests resident on the chip
-    max_len: int = 2048          # slab KV length per slot
+    max_len: int = 2048          # slab KV length per slot (slab mode only)
     token_budget: int = 512
     tbt_slo: float = 0.1
     units: int = 1               # chips in this replica
     tp: int = 1
-    page_size: int = 16
+    page_size: int = DEFAULT_PAGE_SIZE
     temperature: float = 0.0
     sched_overhead: float = 0.0005
     dispatch_overhead: float = 0.004
+    # paged-KV execution (default). ``kv_pool_tokens`` sizes the device page
+    # pools; None matches the slab budget (max_slots * max_len) so the two
+    # modes are capacity-equivalent out of the box.
+    paged: bool = True
+    kv_pool_tokens: Optional[int] = None
 
 
 class DuetEngine:
@@ -65,19 +82,37 @@ class DuetEngine:
         self.ec = engine_cfg
         self.hw = hw
         self.key = jax.random.PRNGKey(seed)
+        self.paged = engine_cfg.paged
 
-        self.cache = model.init_cache(engine_cfg.max_slots, engine_cfg.max_len)
-        pool_pages = engine_cfg.max_slots * (
-            -(-engine_cfg.max_len // engine_cfg.page_size)) + 1
-        self.kv_mgr = PagedKVCacheManager(
-            PagePoolConfig(num_pages=pool_pages,
-                           page_size=engine_cfg.page_size))
+        ps = engine_cfg.page_size
+        if self.paged:
+            pool_tokens = engine_cfg.kv_pool_tokens \
+                or engine_cfg.max_slots * engine_cfg.max_len
+            num_pages = -(-pool_tokens // ps) + 1   # +1: reserved null page
+            self.kv_mgr = PagedKVCacheManager(
+                PagePoolConfig(num_pages=num_pages, page_size=ps))
+            # block-table width: one request may span the whole pool
+            self.max_pages = num_pages - 1
+            self.pools = init_page_pools(self.cfg, self.kv_mgr.pool)
+            self.cache = model.init_state_cache(engine_cfg.max_slots)
+        else:
+            pool_pages = engine_cfg.max_slots * (
+                -(-engine_cfg.max_len // ps)) + 1
+            self.kv_mgr = PagedKVCacheManager(
+                PagePoolConfig(num_pages=pool_pages, page_size=ps))
+            self.max_pages = -(-engine_cfg.max_len // ps)
+            self.pools = None
+            self.cache = model.init_cache(engine_cfg.max_slots,
+                                          engine_cfg.max_len)
         self.mux = AdaptiveMultiplexer(
             self.cfg, hw=hw, total_units=engine_cfg.units,
-            tbt_slo=engine_cfg.tbt_slo, tp=engine_cfg.tp)
+            tbt_slo=engine_cfg.tbt_slo, tp=engine_cfg.tp,
+            page_size=ps if self.paged else 1)
         self.policy = DuetPolicy(self.mux,
                                  token_budget=engine_cfg.token_budget,
-                                 max_batch=engine_cfg.max_slots)
+                                 max_batch=engine_cfg.max_slots,
+                                 kv_mgr=self.kv_mgr,
+                                 reserve_on_admit=False)
         self.state = QueueState()
         self.now = 0.0
         self.free_slots = list(range(engine_cfg.max_slots))
@@ -88,13 +123,29 @@ class DuetEngine:
         self._prefill_fn = jax.jit(
             lambda p, toks, cache, start: model.prefill(
                 p, toks, cache=cache, start_pos=start))
+        self._prefill_paged_fn = jax.jit(
+            lambda p, toks, pools, state, tbl, start: model.prefill_paged(
+                p, toks, pools, state, tbl, start_pos=start))
 
     # ------------------------------------------------------------- plumbing
     def _decode_fn(self, k: int):
         if k not in self._decode_fns:
-            self._decode_fns[k] = make_lookahead_fn(
-                self.model, k, temperature=self.ec.temperature)
+            if self.paged:
+                self._decode_fns[k] = make_paged_lookahead_fn(
+                    self.model, k, temperature=self.ec.temperature)
+            else:
+                self._decode_fns[k] = make_lookahead_fn(
+                    self.model, k, temperature=self.ec.temperature)
         return self._decode_fns[k]
+
+    def _table_width(self, rids: List[int]) -> int:
+        """Per-dispatch block-table width: the smallest power-of-two bucket
+        covering the widest table in the batch. Keeps the jnp gather path
+        O(context) instead of O(pool) while bounding jit recompiles;
+        ``max_pages`` stays the admission bound only."""
+        n = max((len(self.kv_mgr.page_table(rid)) for rid in rids),
+                default=1)
+        return 1 << (max(1, n) - 1).bit_length()
 
     def _slice_cache(self, slot: int):
         return jax.tree.map(lambda a: a[slot:slot + 1], self.cache,
@@ -112,70 +163,185 @@ class DuetEngine:
                     0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
         self._pending = sorted(requests, key=lambda r: r.arrival)
 
-    # ------------------------------------------------------------ execution
-    def _exec_prefill_chunk(self, r: Request, chunk: int):
-        toks = jnp.asarray(
-            r.prompt_tokens[r.prefilled:r.prefilled + chunk])[None, :]
-        sub = self._slice_cache(r.slot)
-        logits, sub = self._prefill_fn(self.params, toks, sub,
-                                       jnp.int32(r.prefilled))
-        self._write_cache(r.slot, sub)
-        self.kv_mgr.allocate(r.rid, chunk)
-        r.prefilled += chunk
-        if r.remaining_prompt <= 0:
-            tok = int(jnp.argmax(logits[0]))
-            self.slot_last_token[r.slot] = tok
-            self.slot_pos[r.slot] = r.prompt_len
-            r.output_tokens.append(tok)
+    # --------------------------------------------------- admission / eviction
+    def _admissible(self, r: Request) -> bool:
+        """Can this request's full KV footprint ever fit the engine?"""
+        if self.paged:
+            need = -(-(r.prompt_len + r.output_len) // self.ec.page_size)
+            return need <= self.max_pages
+        return r.prompt_len + r.output_len <= self.ec.max_len
+
+    def _reject(self, r: Request, why: str):
+        if r.slot is not None:
+            self.free_slots.append(r.slot)
+            r.slot = None
+        self.kv_mgr.free(r.rid)
+        r.phase = Phase.REJECTED
+        r.finish_reason = f"rejected:{why}"
+        self.finished.append(r)
+
+    def _preempt(self, r: Request):
+        """Victim eviction: free the request's pages and requeue it at the
+        head of the waiting queue for recompute-from-prompt (the prefill will
+        replay prompt + already-sampled outputs; greedy decode regenerates
+        the identical suffix)."""
+        self.kv_mgr.free(r.rid)
+        if r.generated:
+            r.resume_len = r.prompt_len + r.generated - 1
+        r.prefilled = 0
+        r.preemptions += 1
+        r.phase = Phase.WAITING
+        if r in self.state.running:
+            self.state.running.remove(r)
+        if r in self.state.prefilling:
+            self.state.prefilling.remove(r)
+        if r.slot is not None:
+            self.free_slots.append(r.slot)
+            r.slot = None
+        self.state.waiting.insert(0, r)
+
+    def _ensure_pages(self, r: Request, new_tokens: int) -> bool:
+        """Make room for a prefill chunk. Only other in-flight prefills are
+        evicted (latest arrival first — LIFO keeps FCFS fairness); decode
+        requests are never sacrificed for prefill progress. If that is not
+        enough the chunk is deferred: decode completions free pages."""
+        if self.kv_mgr.can_allocate(r.rid, new_tokens):
             return True
+        pre = sorted((x for x in self.state.prefilling
+                      if x is not r and self.kv_mgr.page_table(x.rid)),
+                     key=lambda x: x.arrival, reverse=True)
+        for victim in pre:
+            self._preempt(victim)
+            if self.kv_mgr.can_allocate(r.rid, new_tokens):
+                return True
         return False
 
-    def _exec_decode(self, decode_reqs: List[Request], k: int):
-        if not decode_reqs:
-            return
-        kb = _k_bucket(k)
-        kb = max(1, min(kb, min(r.output_len - r.generated
-                                for r in decode_reqs)))
-        # §4.3: preallocate KV pages for all k look-ahead steps up front
-        self.kv_mgr.reserve_lookahead([r.rid for r in decode_reqs], kb)
+    # ------------------------------------------------------------ execution
+    def _exec_prefill_chunk(self, r: Request, chunk: int) -> str:
+        """Run one prefill chunk. Returns "continue" (more prompt left),
+        "first" (prompt done, first token sampled), "resumed" (prompt done,
+        resuming after preemption — the next token was sampled before the
+        preemption), or "deferred" (no pages and nothing to preempt)."""
+        if not self._ensure_pages(r, chunk):
+            return "deferred"
+        self.kv_mgr.allocate(r.rid, chunk)
+        toks = jnp.asarray(
+            r.prefill_token_ids()[r.prefilled:r.prefilled + chunk])[None, :]
+        sub = self._slice_cache(r.slot)
+        if self.paged:
+            tbl = jnp.asarray(
+                self.kv_mgr.padded_tables([r.rid],
+                                          self._table_width([r.rid])))
+            logits, self.pools, sub = self._prefill_paged_fn(
+                self.params, toks, self.pools, sub, tbl,
+                jnp.int32(r.prefilled))
+        else:
+            logits, sub = self._prefill_fn(self.params, toks, sub,
+                                           jnp.int32(r.prefilled))
+        self._write_cache(r.slot, sub)
+        r.prefilled += chunk
+        if r.remaining_prompt > 0:
+            return "continue"
+        self.slot_pos[r.slot] = r.prefill_total
+        if r.resume_len:
+            self.slot_last_token[r.slot] = r.output_tokens[-1]
+            return "resumed"
+        tok = int(jnp.argmax(logits[0]))
+        self.slot_last_token[r.slot] = tok
+        r.output_tokens.append(tok)
+        return "first"
+
+    def _reserve_for(self, reqs: List[Request], kb: int) -> int:
+        """Shrink kb down the bucket ladder until the look-ahead reservation
+        covers every request; 0 when even k=1 does not fit."""
+        while kb >= 1:
+            if self.kv_mgr.reserve_lookahead([r.rid for r in reqs], kb):
+                return kb
+            kb = _k_bucket(kb - 1) if kb > 1 else 0
+        return 0
+
+    def _exec_decode(self, decode_reqs: List[Request],
+                     k: int) -> Tuple[int, List[Request]]:
+        reqs = list(decode_reqs)
+        kb = 0
+        while reqs:
+            # §4.3: preallocate KV pages for all k look-ahead steps up front;
+            # under pool pressure shrink k, then evict a victim
+            want = max(1, min(_k_bucket(k),
+                              min(r.output_len - r.generated for r in reqs)))
+            kb = self._reserve_for(reqs, want)
+            if kb:
+                break
+            # decode-first priority: evict page-holding prefills before
+            # sacrificing a decode request
+            pre = [x for x in self.state.prefilling
+                   if self.kv_mgr.page_table(x.rid)]
+            if pre:
+                self._preempt(max(pre, key=lambda r: r.arrival))
+                continue
+            victim = max(reqs, key=lambda r: r.arrival)
+            reqs.remove(victim)
+            self._preempt(victim)
+        if not reqs:
+            return 0, []
         active = np.zeros(self.ec.max_slots, bool)
-        for r in decode_reqs:
+        for r in reqs:
             active[r.slot] = True
         first = jnp.asarray(self.slot_last_token)[:, None]
         pos = jnp.asarray(self.slot_pos)
         self.key, sub = jax.random.split(self.key)
         fn = self._decode_fn(kb)
-        toks, self.cache, new_pos = fn(self.params, self.cache, first, pos,
-                                       sub, jnp.asarray(active))
+        if self.paged:
+            width = self._table_width([r.rid for r in reqs])
+            tbl = np.zeros((self.ec.max_slots, width), np.int32)
+            rows = self.kv_mgr.padded_tables([r.rid for r in reqs], width)
+            for r, row in zip(reqs, rows):
+                tbl[r.slot] = row
+            toks, self.pools, self.cache, new_pos = fn(
+                self.params, self.pools, self.cache, first, pos,
+                jnp.asarray(tbl), sub, jnp.asarray(active))
+        else:
+            toks, self.cache, new_pos = fn(self.params, self.cache, first,
+                                           pos, sub, jnp.asarray(active))
         toks = np.array(toks)
         self.slot_pos = np.array(new_pos)
-        for r in decode_reqs:
+        for r in reqs:
             seq = toks[r.slot, :kb]
             take = min(kb, r.output_len - r.generated)
             r.output_tokens.extend(int(t) for t in seq[:take])
-            self.slot_last_token[r.slot] = int(seq[min(take, kb) - 1])
+            self.slot_last_token[r.slot] = int(seq[take - 1])
             self.kv_mgr.commit_tokens(r.rid, take)
-        return kb
+        return kb, reqs
 
     # ------------------------------------------------------------- run loop
     def run(self) -> ServingMetrics:
-        pending = self._pending
+        pending = list(self._pending)
         all_reqs = list(pending)
-        pending = list(pending)
         while pending or self.state.waiting or self.state.running \
                 or self.state.prefilling:
             self.state.admit_arrivals(pending, self.now)
-            # slot admission: waiting requests need a slab slot
+            # slot admission, FCFS. A request whose footprint can never fit
+            # is rejected with a recorded outcome — never silently dropped.
             for r in list(self.state.waiting):
-                if self.free_slots and r.prompt_len + r.output_len \
-                        <= self.ec.max_len:
+                if not self._admissible(r):
+                    self.state.waiting.remove(r)
+                    self._reject(r, "kv_footprint_exceeds_capacity")
+                elif r.slot is None and self.free_slots:
                     r.slot = self.free_slots.pop()
-            self.state.waiting = [r for r in self.state.waiting
-                                  if r.slot is not None or True]
+            # slot-less requests stay queued in `waiting`; _plan() exposes
+            # only slot-holders to the policy, the rest wait FCFS.
             plan = self._plan()
             if plan.is_idle:
                 if pending:
                     self.now = max(self.now, pending[0].arrival)
+                    continue
+                if self.state.waiting:
+                    # nothing runs, nothing is pending, and the policy still
+                    # refuses every waiting request: no completion can ever
+                    # free pages, so these can never start.
+                    for r in list(self.state.waiting):
+                        self.state.waiting.remove(r)
+                        self._reject(r, "kv_admission_starved")
                     continue
                 break
             self._execute(plan)
@@ -203,35 +369,44 @@ class DuetEngine:
             part = plan.decision.partition
             k = part.k
             t_d, t_p = part.t_decode, part.t_prefill
-            span = max(k * t_d, t_p) + self.ec.sched_overhead \
-                + self.ec.dispatch_overhead
         else:
             k = 1
             t_iter = self.mux.predict_mixed(pre_loads + dec_loads) \
                 + self.ec.sched_overhead \
                 + (self.ec.dispatch_overhead if plan.prefill else 0.0)
-            t_d = t_p = span = t_iter
+            t_d = t_p = t_iter
 
-        kb = self._exec_decode(plan.decode, k) if plan.decode else 0
-        for r, chunk in plan.prefill:
-            done = self._exec_prefill_chunk(r, chunk)
-            if done:
-                self.state.prefilling.remove(r)
-                r.phase = Phase.DECODE
-                r.record_token(self.now + t_p)
-                if r.done:
-                    self._retire(r)
-                else:
-                    self.state.running.append(r)
-        # metrics: decode tokens at t_d spacing (decode dispatched first)
-        for j in range(1, (kb or 0) + 1):
+        kb, ran = (self._exec_decode(plan.decode, k)
+                   if plan.decode else (0, []))
+        # metrics: decode tokens at t_d spacing (decode dispatched first).
+        # Recorded before the prefill chunks run so a preemption triggered by
+        # a prefill allocation sees consistent generated/output counts.
+        for j in range(1, kb + 1):
             ts = self.now + j * t_d
-            for r in list(plan.decode):
+            for r in list(ran):
                 if r.generated < len(r.output_tokens):
                     r.record_token(ts)
                     if r.done:
                         self.state.running.remove(r)
                         self._retire(r)
+        for r, chunk in plan.prefill:
+            if r.phase != Phase.PREFILL:
+                continue   # preempted earlier in this iteration
+            status = self._exec_prefill_chunk(r, chunk)
+            if status in ("first", "resumed"):
+                self.state.prefilling.remove(r)
+                r.phase = Phase.DECODE
+                if status == "first":
+                    r.record_token(self.now + t_p)
+                if r.done:
+                    self._retire(r)
+                else:
+                    self.state.running.append(r)
+        if plan.mode == "duet" and plan.decision.partition is not None:
+            span = max(kb * t_d, t_p) + self.ec.sched_overhead \
+                + self.ec.dispatch_overhead
+        else:
+            span = t_d
         self.now += span
 
     def _retire(self, r: Request):

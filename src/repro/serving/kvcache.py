@@ -21,10 +21,16 @@ import numpy as np
 from repro.configs.base import ArchConfig
 
 
+# Single source of truth for the serving page size: engine, simulator and
+# the fig1/fig6 benchmarks all reference this so predicted and executed
+# KV-read geometry cannot drift apart.
+DEFAULT_PAGE_SIZE = 16
+
+
 @dataclass
 class PagePoolConfig:
     num_pages: int
-    page_size: int = 16
+    page_size: int = DEFAULT_PAGE_SIZE
 
 
 class PagedKVCacheManager:
@@ -91,8 +97,16 @@ class PagedKVCacheManager:
         return True
 
     def commit_tokens(self, rid: int, n: int):
-        """Mark n reserved tokens as written."""
-        self._lengths[rid] = self._lengths.get(rid, 0) + n
+        """Mark n reserved tokens as written. Committing past the request's
+        allocated pages means the device program wrote unowned memory — that
+        is always an engine bug (a dropped reserve_lookahead result), so
+        fail loudly instead of corrupting the ledger."""
+        new_len = self._lengths.get(rid, 0) + n
+        if new_len > len(self._tables.get(rid, ())) * self.page_size:
+            raise MemoryError(
+                f"commit_tokens({rid}, {n}): length {new_len} exceeds "
+                f"allocated pages ({len(self._tables.get(rid, ()))})")
+        self._lengths[rid] = new_len
 
     def free(self, rid: int):
         for p in self._tables.pop(rid, []):

@@ -13,6 +13,7 @@ class Phase(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     FINISHED = "finished"
+    REJECTED = "rejected"
 
 
 @dataclass
@@ -30,19 +31,48 @@ class Request:
     prompt_tokens: Optional[np.ndarray] = None   # real engine: token ids
     output_tokens: List[int] = field(default_factory=list)
 
+    # preemption / admission outcome ---------------------------------------
+    # After a recompute-from-prompt preemption the prefill must cover the
+    # prompt plus all already-sampled output tokens except the last (the last
+    # one is the next decode input). ``resume_len`` freezes that target.
+    resume_len: int = 0
+    preemptions: int = 0
+    finish_reason: Optional[str] = None   # "completed" | "rejected:<why>"
+
     # metrics ---------------------------------------------------------------
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
 
     @property
+    def prefill_total(self) -> int:
+        """Tokens the prefill phase must process (prompt, or the frozen
+        resume target after a preemption)."""
+        return self.resume_len or self.prompt_len
+
+    @property
     def remaining_prompt(self) -> int:
-        return self.prompt_len - self.prefilled
+        return self.prefill_total - self.prefilled
+
+    @property
+    def folded_outputs(self) -> int:
+        """Output tokens replayed inside the (resume) prefill."""
+        return max(0, self.resume_len - self.prompt_len)
 
     @property
     def context_len(self) -> int:
         """Tokens currently in this request's KV cache."""
-        return self.prefilled + self.generated
+        return self.prefilled + self.generated - self.folded_outputs
+
+    def prefill_token_ids(self) -> np.ndarray:
+        """Token ids the prefill consumes: the prompt, extended with the
+        already-sampled outputs being replayed after a preemption."""
+        if self.folded_outputs:
+            return np.concatenate([
+                np.asarray(self.prompt_tokens, np.int32),
+                np.asarray(self.output_tokens[:self.folded_outputs],
+                           np.int32)])
+        return np.asarray(self.prompt_tokens, np.int32)
 
     @property
     def done(self) -> bool:
@@ -57,6 +87,7 @@ class Request:
         if self.done:
             self.phase = Phase.FINISHED
             self.finish_time = now
+            self.finish_reason = "completed"
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:
@@ -82,6 +113,9 @@ class ServingMetrics:
         return {
             "num_finished": len(finished),
             "num_requests": len(self.requests),
+            "num_rejected": sum(1 for r in self.requests
+                                if r.phase == Phase.REJECTED),
+            "num_preemptions": sum(r.preemptions for r in self.requests),
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
             "p99_ttft_s": _pct(ttfts, 0.99),
             "mean_tbt_s": sum(tbts) / len(tbts) if tbts else float("nan"),

@@ -66,19 +66,44 @@ class QueueState:
 
 
 class BasePolicy:
-    """Shared chunked-prefill mechanics (budget fill, admission control)."""
+    """Shared chunked-prefill mechanics (budget fill, admission control).
+
+    Admission is page-granular when a live :class:`PagedKVCacheManager` is
+    supplied via ``kv_mgr``:
+
+      * ``reserve_on_admit=True`` (simulator replicas) — the policy owns the
+        ledger: admission allocates pages for the request's full
+        prompt+output footprint and ``release`` frees them on finish.
+      * ``reserve_on_admit=False`` (real engine) — the engine allocates
+        lazily during prefill/decode and preempts under pressure; admission
+        only asks ``can_admit`` whether the remaining prefill fits the free
+        pool right now.
+
+    ``kv_capacity_tokens`` keeps the legacy token-granular counter for
+    callers without a manager.
+    """
 
     def __init__(self, *, token_budget: int = DEFAULT_TOKEN_BUDGET,
                  max_batch: int = 1024,
-                 kv_capacity_tokens: Optional[int] = None):
+                 kv_capacity_tokens: Optional[int] = None,
+                 kv_mgr=None, reserve_on_admit: bool = True):
         self.token_budget = token_budget
         self.max_batch = max_batch
         self.kv_capacity = kv_capacity_tokens
         self.kv_in_use = 0
+        self.kv_mgr = kv_mgr
+        self.reserve_on_admit = reserve_on_admit
 
-    # -- admission bookkeeping (token-granular; engine swaps in the paged
-    #    manager for page-granular accounting) ------------------------------
+    # -- admission bookkeeping ---------------------------------------------
     def _reserve(self, r: Request) -> bool:
+        if self.kv_mgr is not None:
+            if self.reserve_on_admit:
+                need = r.prompt_len + r.output_len
+                if not self.kv_mgr.can_admit({r.rid: need}):
+                    return False
+                self.kv_mgr.allocate(r.rid, need)
+                return True
+            return self.kv_mgr.can_admit({r.rid: r.remaining_prompt})
         if self.kv_capacity is None:
             return True
         need = r.prompt_len + r.output_len
@@ -88,6 +113,10 @@ class BasePolicy:
         return True
 
     def release(self, r: Request):
+        if self.kv_mgr is not None:
+            if self.reserve_on_admit:
+                self.kv_mgr.free(r.rid)
+            return
         if self.kv_capacity is not None:
             self.kv_in_use -= r.prompt_len + r.output_len
 

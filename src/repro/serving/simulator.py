@@ -25,6 +25,7 @@ from repro.configs.base import ArchConfig
 from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import (HardwareSpec, RequestLoad, RooflineModel,
                                  TPU_V5E)
+from repro.serving.kvcache import PagedKVCacheManager, PagePoolConfig
 from repro.serving.request import Phase, Request, ServingMetrics
 from repro.serving.scheduler import (BasePolicy, ChunkedPrefillPolicy,
                                      DuetPolicy, IterationPlan,
@@ -65,6 +66,10 @@ class SimConfig:
     horizon: float = 1e6
     mem_fraction: float = 0.9
     hbm_per_unit: float = 16e9
+    # paged-KV geometry: admission rounds footprints to page multiples and
+    # the roofline pads KV reads the same way (page_size=1 = token-granular,
+    # the pre-paging behaviour).
+    page_size: int = 1
 
 
 class InstanceSim:
@@ -77,7 +82,8 @@ class InstanceSim:
         self.policy = policy
         self.sim = sim
         self.hw = hw
-        self.model = RooflineModel(cfg, hw, tp=sim.tp)
+        self.model = RooflineModel(cfg, hw, tp=sim.tp,
+                                   page_size=sim.page_size)
         self.state = QueueState()
         self.now = 0.0
         self.finished: List[Request] = []
@@ -205,7 +211,8 @@ class DisaggSim:
         self.cfg = cfg
         self.sim = sim
         self.hw = hw
-        self.model = RooflineModel(cfg, hw, tp=sim.tp)
+        self.model = RooflineModel(cfg, hw, tp=sim.tp,
+                                   page_size=sim.page_size)
         self.transfer_bw = transfer_bw
         self.token_budget = token_budget
         self.max_batch = max_batch
@@ -261,8 +268,11 @@ class DisaggSim:
         kv_in_use = 0
         finished = []
 
+        ps = max(1, self.sim.page_size)
+
         def _kv_need(r):
-            return r.prompt_len + r.output_len
+            # page-rounded, matching the aggregated replicas' ledger
+            return -(-(r.prompt_len + r.output_len) // ps) * ps
 
         while ready or running:
             while ready and (ready[0][0] <= t_d or not running):
@@ -295,18 +305,28 @@ class DisaggSim:
 
 
 # ---------------------------------------------------------------------------
+def _admission_ledger(cfg: ArchConfig, sim: SimConfig,
+                      hw: HardwareSpec) -> PagedKVCacheManager:
+    """Page-granular admission ledger for one simulated replica: the policy
+    allocates a request's full prompt+output footprint on admission and
+    frees it on finish (BasePolicy reserve_on_admit mode)."""
+    cap = kv_capacity_tokens(cfg, hw, sim.units, sim.mem_fraction,
+                             sim.hbm_per_unit)
+    ps = max(1, sim.page_size)
+    return PagedKVCacheManager(
+        PagePoolConfig(num_pages=cap // ps + 1, page_size=ps))
+
+
 def make_duet_instance(cfg: ArchConfig, sim: SimConfig,
                        hw: HardwareSpec = TPU_V5E,
                        token_budget: int = 8192,
                        max_batch: int = 1024,
                        unit_step: int = 1) -> InstanceSim:
-    cap = kv_capacity_tokens(cfg, hw, sim.units, sim.mem_fraction,
-                             sim.hbm_per_unit)
     mux = AdaptiveMultiplexer(cfg, hw=hw, total_units=sim.units,
                               tbt_slo=sim.tbt_slo, tp=sim.tp,
-                              unit_step=unit_step)
+                              unit_step=unit_step, page_size=sim.page_size)
     policy = DuetPolicy(mux, token_budget=token_budget, max_batch=max_batch,
-                        kv_capacity_tokens=cap)
+                        kv_mgr=_admission_ledger(cfg, sim, hw))
     return InstanceSim(cfg, policy, sim, hw)
 
 
@@ -314,16 +334,13 @@ def make_baseline_instance(cfg: ArchConfig, sim: SimConfig, kind: str,
                            hw: HardwareSpec = TPU_V5E,
                            token_budget: int = 8192,
                            max_batch: int = 1024) -> InstanceSim:
-    cap = kv_capacity_tokens(cfg, hw, sim.units, sim.mem_fraction,
-                             sim.hbm_per_unit)
+    mgr = _admission_ledger(cfg, sim, hw)
     if kind in ("vllm", "sglang-chunked"):
         policy = ChunkedPrefillPolicy(token_budget=token_budget,
-                                      max_batch=max_batch,
-                                      kv_capacity_tokens=cap)
+                                      max_batch=max_batch, kv_mgr=mgr)
     elif kind == "sglang-default":
         policy = PrefillFirstPolicy(token_budget=token_budget,
-                                    max_batch=max_batch,
-                                    kv_capacity_tokens=cap)
+                                    max_batch=max_batch, kv_mgr=mgr)
     else:
         raise ValueError(kind)
     return InstanceSim(cfg, policy, sim, hw)

@@ -47,6 +47,8 @@ SCRIPT = textwrap.dedent("""
                                                pos)
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):   # older jax: one dict per computation
+            cost = cost[0]
         coll = collective_bytes(compiled.as_text())
         results[arch] = {"flops": cost.get("flops", 0),
                          "collective_count": coll["count"]}

@@ -1,0 +1,216 @@
+"""Paged-KV execution path (ISSUE 1 tentpole): slab/paged token
+equivalence, beyond-slab capacity via paging, tiny-pool look-ahead
+fallback with preemption/requeue, page-table growth across chunked
+prefill + look-ahead decode, and explicit rejection outcomes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.lookahead import lookahead_decode, lookahead_decode_paged
+from repro.models import Model
+from repro.serving import DuetEngine, EngineConfig, Request
+from repro.serving.kvcache import (PagedKVCacheManager, PagePoolConfig,
+                                   init_page_pools)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("qwen3-4b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _workload(specs):
+    """Fresh Request objects (engines mutate them); prompts are derived
+    deterministically from rid inside submit()."""
+    return [Request(rid=rid, arrival=a, prompt_len=p, output_len=o)
+            for rid, a, p, o in specs]
+
+
+def _run(model, params, specs, **cfg_kw):
+    reqs = _workload(specs)
+    eng = DuetEngine(model, params, EngineConfig(**cfg_kw))
+    eng.submit(reqs)
+    metrics = eng.run()
+    return eng, metrics, {r.rid: list(r.output_tokens) for r in reqs}
+
+
+def test_paged_engine_matches_slab(small_model):
+    cfg, model, params = small_model
+    specs = [(i, i * 0.02, 20 + 7 * i, 4 + i) for i in range(5)]
+    outs = {}
+    for paged in (False, True):
+        _, metrics, toks = _run(model, params, specs, max_slots=3,
+                                max_len=128, token_budget=48, page_size=8,
+                                paged=paged)
+        assert metrics.summary()["num_finished"] == len(specs)
+        outs[paged] = toks
+    assert outs[True] == outs[False]
+
+
+def test_paged_serves_beyond_slab_capacity(small_model):
+    """Acceptance pin: each request's footprint (48 tokens) exceeds the slab
+    per-slot ceiling (max_len=32) and the aggregate resident footprint
+    (2 x 48) exceeds the whole slab (2 x 32). The slab engine must reject
+    every request with a recorded outcome (not drop them); the paged engine
+    must serve all of them fully from a larger page pool."""
+    cfg, model, params = small_model
+    specs = [(i, 0.01 * i, 40, 8) for i in range(4)]
+
+    eng, metrics, _ = _run(model, params, specs, max_slots=2, max_len=32,
+                           token_budget=48, page_size=8, paged=False)
+    s = metrics.summary()
+    assert s["num_rejected"] == 4 and s["num_finished"] == 0
+    assert all(r.finish_reason.startswith("rejected")
+               for r in metrics.requests)
+
+    eng, metrics, _ = _run(model, params, specs, max_slots=2, max_len=32,
+                           token_budget=48, page_size=8, paged=True,
+                           kv_pool_tokens=256)
+    s = metrics.summary()
+    assert s["num_finished"] == 4 and s["num_rejected"] == 0
+    assert all(len(r.output_tokens) == r.output_len
+               for r in metrics.requests)
+    assert eng.kv_mgr.used_pages == 0
+
+
+def test_tiny_pool_lookahead_fallback_and_preemption(small_model):
+    """Regression for the ignored reserve_lookahead return: with a pool too
+    small for both requests' decode growth, the engine must shrink k /
+    preempt+requeue instead of running past the allocated pages — and the
+    final outputs must match an unconstrained run exactly."""
+    cfg, model, params = small_model
+    specs = [(i, 0.0, 20, 12) for i in range(2)]
+    _, ref_metrics, ref = _run(model, params, specs, max_slots=2, max_len=64,
+                               token_budget=32, page_size=4, paged=True,
+                               kv_pool_tokens=1024)
+    assert ref_metrics.summary()["num_finished"] == 2
+
+    eng, metrics, got = _run(model, params, specs, max_slots=2, max_len=64,
+                             token_budget=32, page_size=4, paged=True,
+                             kv_pool_tokens=56)
+    s = metrics.summary()
+    assert s["num_finished"] == 2 and s["num_rejected"] == 0
+    assert got == ref
+    # the pool (14 pages) cannot hold both full footprints (2 x 8 pages):
+    # at least one victim eviction must have happened
+    assert s["num_preemptions"] >= 1
+    assert eng.kv_mgr.used_pages == 0
+
+
+def test_page_table_growth_and_paged_lookahead(small_model):
+    """Page tables grow page-by-page across chunked prefill, and the fused
+    look-ahead decode over reserved pages matches the slab program."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=64, page_size=4))
+    pools = init_page_pools(cfg, mgr.pool)
+    state = model.init_state_cache(1)
+    done, logits = 0, None
+    for chunk in (8, 8, 6):
+        mgr.allocate(1, chunk)
+        assert len(mgr.page_table(1)) == -(-(done + chunk) // 4)
+        tbl = jnp.asarray(mgr.padded_tables([1], 16))
+        toks = jnp.asarray(prompt[done:done + chunk])[None, :]
+        logits, pools, state = model.prefill_paged(
+            params, toks, pools, state, tbl, start_pos=jnp.int32(done))
+        done += chunk
+    slab = model.init_cache(1, 64)
+    ref_logits, slab = model.prefill(params, jnp.asarray(prompt)[None, :],
+                                     cache=slab)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-4)
+
+    first = jnp.asarray([[int(jnp.argmax(logits[0]))]])
+    k = 4
+    assert mgr.reserve_lookahead([1], k)
+    tbl = jnp.asarray(mgr.padded_tables([1], 16))
+    toks_p, pools, state, pos_p = lookahead_decode_paged(
+        model, params, pools, state, first, jnp.asarray([22]), tbl, k)
+    toks_s, _, pos_s = lookahead_decode(model, params, slab, first,
+                                        jnp.asarray([22]), k=k)
+    np.testing.assert_array_equal(np.asarray(toks_p), np.asarray(toks_s))
+    assert int(pos_p[0]) == int(pos_s[0]) == 22 + k
+
+
+def test_paged_kernel_decode_matches_jnp(small_model):
+    """attn_kernel=True routes the paged read through the Pallas
+    paged_decode kernel (interpret mode on CPU) — must match the jnp
+    gather path."""
+    cfg, model, params = small_model
+    m_ker = Model(cfg, attn_kernel=True)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 13).astype(np.int32)
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=32, page_size=8))
+    pools = init_page_pools(cfg, mgr.pool)
+    state = model.init_state_cache(1)
+    mgr.allocate(1, len(prompt) + 1)
+    tbl = jnp.asarray(mgr.padded_tables([1], 8))
+    logits, pools, state = model.prefill_paged(
+        params, jnp.asarray(prompt)[None, :], pools, state, tbl)
+    tok = jnp.asarray([[int(jnp.argmax(logits[0]))]])
+    pos = jnp.asarray([len(prompt)])
+    lg_ref, _, _ = model.decode_step_paged(params, pools, state, tok, pos,
+                                           tbl)
+    lg_ker, _, _ = m_ker.decode_step_paged(params, pools, state, tok, pos,
+                                           tbl)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_ker),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_hybrid_state_frozen_under_decode_prefill_overlap():
+    """Recurrent (mamba2) per-slot state must stay frozen for slots that are
+    inactive during a fused decode program: a request chunk-prefilling while
+    another decodes must produce exactly the tokens it produces when served
+    alone — on both the slab and the paged path."""
+    cfg = reduced(get_config("zamba2-1.2b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    specs = [(0, 0.0, 24, 10), (1, 0.001, 60, 4)]
+    for paged in (False, True):
+        ref = {}
+        for spec in specs:   # reference: each request served alone
+            _, _, toks = _run(model, params, [spec], max_slots=2,
+                              max_len=128, token_budget=16, page_size=8,
+                              paged=paged)
+            ref.update(toks)
+        _, metrics, got = _run(model, params, specs, max_slots=2,
+                               max_len=128, token_budget=16, page_size=8,
+                               paged=paged)
+        assert metrics.summary()["num_finished"] == 2
+        assert got == ref, f"paged={paged}"
+
+
+def test_mla_paged_decode_matches_slab():
+    """MLA latent pools: paged prefill+decode equals the slab path."""
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+
+    slab = model.init_cache(1, 32)
+    ref_logits, slab = model.prefill(params, jnp.asarray(prompt)[None, :],
+                                     cache=slab)
+
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=32, page_size=4))
+    pools = init_page_pools(cfg, mgr.pool)
+    state = model.init_state_cache(1)
+    mgr.allocate(1, len(prompt) + 2)
+    tbl = jnp.asarray(mgr.padded_tables([1], 8))
+    logits, pools, state = model.prefill_paged(
+        params, jnp.asarray(prompt)[None, :], pools, state, tbl)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-4)
+
+    tok = jnp.asarray([[int(jnp.argmax(logits[0]))]])
+    pos = jnp.asarray([len(prompt)])
+    lg_p, pools, state = model.decode_step_paged(params, pools, state, tok,
+                                                 pos, tbl)
+    lg_s, slab = model.decode_step(params, slab, tok, pos)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_s),
+                               atol=1e-4, rtol=1e-4)
