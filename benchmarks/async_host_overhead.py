@@ -1,0 +1,110 @@
+"""Host-synchronisation overhead: synchronous vs interruption-free engine
+(paper §4.3, Table: CPU-GPU sync elimination).
+
+Two complementary measurements:
+
+1. **Simulated serving impact** — the discrete-event simulator with
+   ``SimConfig(host_sync_overhead=h)`` replays a trace twice: a
+   synchronous engine pays ``h`` per decode step plus per *finishing*
+   prefill chunk (k + finishing-chunk blocking syncs per duet
+   super-iteration), the interruption-free engine pays ``h`` once per
+   super-iteration. Emits throughput / p99-TBT deltas over a sweep of h.
+
+2. **Real dispatch accounting** — the reduced-config AsyncDuetEngine run
+   on an actual trace, reporting measured ``host_syncs``,
+   ``super_iterations``, dispatch-cache hit rate, and the wall-clock ratio
+   against the synchronous oracle engine on the same workload.
+
+Usage:
+  PYTHONPATH=src python benchmarks/async_host_overhead.py [--real]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from common import DEFAULT_ARCH, emit
+
+from repro.configs import get_config, reduced
+from repro.serving.simulator import SimConfig, make_duet_instance
+from repro.serving.traces import synth_trace
+
+SYNC_SWEEP_H = (0.0005, 0.001, 0.002, 0.004)
+
+
+def simulated(cfg, n=150, qps=5.0):
+    reqs = synth_trace("azure-conv", n, qps, seed=0)
+    base = make_duet_instance(cfg, SimConfig(units=1, tp=1)).run(reqs)
+    emit("host_overhead/legacy_tput_tok_s",
+         base.summary()["output_token_throughput"])
+    for h in SYNC_SWEEP_H:
+        for free in (False, True):
+            sim = SimConfig(units=1, tp=1, host_sync_overhead=h,
+                            interruption_free=free)
+            m = make_duet_instance(cfg, sim).run(reqs).summary()
+            tag = "async" if free else "sync"
+            emit(f"host_overhead/{tag}_h{h*1e3:g}ms_tput_tok_s",
+                 m["output_token_throughput"])
+            emit(f"host_overhead/{tag}_h{h*1e3:g}ms_p99_tbt_ms",
+                 m["p99_tbt_s"] * 1e3)
+
+
+def real(arch: str):
+    import jax
+
+    from repro.models import Model
+    from repro.serving import (AsyncDuetEngine, DuetEngine, EngineConfig,
+                               Request)
+
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(max_slots=4, max_len=128, token_budget=48, page_size=8)
+    reqs = synth_trace("azure-conv", 12, qps=20.0, seed=0)
+    for r in reqs:
+        r.prompt_len = min(r.prompt_len, 48)
+        r.output_len = min(r.output_len, 12)
+
+    # program caches are per-engine-instance, so warmup and timing must
+    # run the SAME instances (fresh Request objects: engines mutate them)
+    def run_once(eng, base):
+        # shift arrivals past the engine clock so the replay (and thus the
+        # shape-bucket sequence) matches the warmup run exactly
+        eng.submit([Request(rid=base + r.rid, arrival=eng.now + r.arrival,
+                            prompt_len=r.prompt_len,
+                            output_len=r.output_len) for r in reqs])
+        eng.run()
+
+    sync_eng = DuetEngine(model, params, EngineConfig(**kw))
+    async_eng = AsyncDuetEngine(model, params, EngineConfig(**kw))
+    run_once(sync_eng, 0)             # compile warmup
+    run_once(async_eng, 0)
+    t0 = time.perf_counter()
+    run_once(sync_eng, 100)
+    t_sync = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_once(async_eng, 100)
+    t_async = time.perf_counter() - t0
+
+    st = async_eng.dstats
+    emit("host_overhead/real_wall_sync_s", t_sync)
+    emit("host_overhead/real_wall_async_s", t_async)
+    emit("host_overhead/real_syncs_per_superiter",
+         st.syncs_per_super_iteration)
+    emit("host_overhead/real_cache_hit_rate",
+         st.cache_hits / max(1, st.dispatches))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=DEFAULT_ARCH)
+    ap.add_argument("--real", action="store_true",
+                    help="also run the real reduced-config engines")
+    args = ap.parse_args()
+    simulated(get_config(args.arch))
+    if args.real:
+        real(args.arch)
+
+
+if __name__ == "__main__":
+    main()

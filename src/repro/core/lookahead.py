@@ -151,3 +151,143 @@ def make_paged_lookahead_fn(model: Model, k: int, *,
                   key=key, active_mask=active_mask)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Fused duet super-iteration (async engine): k look-ahead decode steps plus
+# one prefill chunk compiled into a SINGLE device program. All sampling —
+# including the first token of a finishing prefill — happens in-program, so
+# the host never reads a device value to build the next dispatch; decode
+# input tokens and positions stay resident on device (`last_tok`/`pos`
+# threaded through successive programs with buffer donation off-CPU).
+# ---------------------------------------------------------------------------
+def _tree_slice(tree, idx):
+    """Slice batch row `idx` (traced scalar ok) out of every leaf."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, idx, 1, axis=0), tree)
+
+
+def _tree_write(tree, sub, idx):
+    """Write a 1-row subtree back at batch row `idx` (traced scalar ok)."""
+    return jax.tree.map(
+        lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+            full, part.astype(full.dtype), idx, axis=0), tree, sub)
+
+
+def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
+                      finish: bool = False, sample: bool = False,
+                      temperature: float = 0.0, donate: bool = True):
+    """Build one fused duet super-iteration program.
+
+    Static bucket parameters (each combination compiles once — the engine's
+    dispatch cache keys on them plus the argument shape buckets):
+
+      kb      — look-ahead decode depth (0 = prefill-only dispatch)
+      chunk   — prefill chunk length (0 = decode-only dispatch)
+      finish  — this chunk completes the prompt: set the slot's position and
+                decode input token in-program
+      sample  — the finishing token is argmax-sampled from the chunk logits
+                (False on preemption resume: the host already knows the next
+                token and passes it as ``override_tok``)
+
+    Signatures (B = engine slot count, W/Wp = block-table width buckets,
+    C = chunk):
+
+      paged: run(params, pools, state, last_tok (B,1), pos (B,),
+                 tables (B,W), key, active (B,),
+                 pre_toks (1,C), pre_tbl (1,Wp), pre_start, pre_slot,
+                 override_tok)
+               -> (toks (B,kb), sampled, last_tok, pos, pools, state, key)
+      slab:  run(params, cache, last_tok, pos, key, active,
+                 pre_toks, pre_start, pre_slot, override_tok)
+               -> (toks (B,kb), sampled, last_tok, pos, cache, key)
+
+    ``sampled`` is the finishing prefill's next-token (or -1): the host
+    fetches it together with ``toks`` in the single per-iteration sync.
+    """
+    if kb == 0 and chunk == 0:
+        raise ValueError("empty super-iteration")
+
+    def _decode(params, kvstate, last_tok, pos, tables, dkey, active):
+        if paged:
+            pools, state = kvstate
+            toks, pools, state, pos = lookahead_decode_paged(
+                model, params, pools, state, last_tok, pos, tables, kb,
+                key=dkey, temperature=temperature, active_mask=active)
+            kvstate = (pools, state)
+        else:
+            (cache,) = kvstate
+            toks, cache, pos = lookahead_decode(
+                model, params, cache, last_tok, pos, kb, key=dkey,
+                temperature=temperature, active_mask=active)
+            kvstate = (cache,)
+        # feed the last generated token back as the next decode input; the
+        # engine guarantees kb <= remaining output for every batch member,
+        # so the final scan step is always a live token for active slots
+        last_tok = jnp.where(active[:, None], toks[:, -1:], last_tok)
+        return toks, last_tok, pos, kvstate
+
+    def _prefill(params, kvstate, last_tok, pos, pre_toks, pre_tbl,
+                 pre_start, pre_slot, override_tok):
+        if paged:
+            pools, state = kvstate
+            sub = _tree_slice(state, pre_slot)
+            logits, pools, sub = model.prefill_paged(
+                params, pre_toks, pools, sub, pre_tbl, start_pos=pre_start)
+            kvstate = (pools, _tree_write(state, sub, pre_slot))
+        else:
+            (cache,) = kvstate
+            sub = _tree_slice(cache, pre_slot)
+            logits, sub = model.prefill(params, pre_toks, cache=sub,
+                                        start_pos=pre_start)
+            kvstate = (_tree_write(cache, sub, pre_slot),)
+        sampled = jnp.int32(-1)
+        if finish:
+            tok = (jnp.argmax(logits[0]).astype(jnp.int32) if sample
+                   else override_tok)
+            last_tok = jax.lax.dynamic_update_slice(
+                last_tok, tok[None, None], (pre_slot, 0))
+            pos = jax.lax.dynamic_update_slice(
+                pos, (pre_start + chunk)[None].astype(pos.dtype),
+                (pre_slot,))
+            if sample:
+                sampled = tok
+        return sampled, last_tok, pos, kvstate
+
+    if paged:
+        def fused(params, pools, state, last_tok, pos, tables, key, active,
+                  pre_toks, pre_tbl, pre_start, pre_slot, override_tok):
+            key, dkey = jax.random.split(key)
+            kvstate = (pools, state)
+            toks = jnp.zeros((last_tok.shape[0], 0), jnp.int32)
+            sampled = jnp.int32(-1)
+            if kb > 0:
+                toks, last_tok, pos, kvstate = _decode(
+                    params, kvstate, last_tok, pos, tables, dkey, active)
+            if chunk > 0:
+                sampled, last_tok, pos, kvstate = _prefill(
+                    params, kvstate, last_tok, pos, pre_toks, pre_tbl,
+                    pre_start, pre_slot, override_tok)
+            pools, state = kvstate
+            return toks, sampled, last_tok, pos, pools, state, key
+
+        donate_argnums = (1, 2, 3, 4) if donate else ()
+    else:
+        def fused(params, cache, last_tok, pos, key, active,
+                  pre_toks, pre_start, pre_slot, override_tok):
+            key, dkey = jax.random.split(key)
+            kvstate = (cache,)
+            toks = jnp.zeros((last_tok.shape[0], 0), jnp.int32)
+            sampled = jnp.int32(-1)
+            if kb > 0:
+                toks, last_tok, pos, kvstate = _decode(
+                    params, kvstate, last_tok, pos, None, dkey, active)
+            if chunk > 0:
+                sampled, last_tok, pos, kvstate = _prefill(
+                    params, kvstate, last_tok, pos, pre_toks, None,
+                    pre_start, pre_slot, override_tok)
+            (cache,) = kvstate
+            return toks, sampled, last_tok, pos, cache, key
+
+        donate_argnums = (1, 2, 3) if donate else ()
+    return jax.jit(fused, donate_argnums=donate_argnums)

@@ -6,26 +6,45 @@ granularity (single chip — kernels.duet_attention) or by splitting the model
 axis into sub-meshes (``mesh.split_duet_submeshes``). On CPU the engine runs
 reduced configs end-to-end with the virtual TPU clock (serving/engine.py).
 
+Two execution modes:
+
+* default — synchronous :class:`DuetEngine` (the token-equivalence oracle)
+* ``--stream`` — asynchronous :class:`AsyncDuetEngine` with open-loop
+  arrival replay: requests are fed through the streaming ``submit`` inbox
+  as the virtual clock reaches their trace arrival, and per-token events
+  are printed as JSON lines while generation is still in flight.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --trace azure-conv --qps 4 --num-requests 32
+  PYTHONPATH=src python -m repro.launch.serve --reduced --stream \
+      --num-requests 8 --no-paged
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import sys
 
 import jax
 
 from repro.configs import get_config, list_configs, reduced
 from repro.models.transformer import Model
+from repro.serving.async_engine import (AsyncDuetEngine, FinishEvent,
+                                        TokenEvent)
 from repro.serving.engine import DuetEngine, EngineConfig
-from repro.serving.request import Request
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE
 from repro.serving.traces import TRACES, synth_trace
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def _warn(msg: str):
+    print(f"warning: {msg}", file=sys.stderr)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="Run the DuetServe engine on a synthesised trace.")
     ap.add_argument("--arch", choices=list_configs(), default="qwen3-4b")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU-runnable)")
@@ -37,27 +56,96 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--max-slots", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    # engine mode (previously hardcoded)
+    ap.add_argument("--paged", dest="paged", action="store_true",
+                    default=True,
+                    help="paged-KV execution (default)")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="slab-KV oracle mode")
+    ap.add_argument("--page-size", type=int, default=DEFAULT_PAGE_SIZE)
+    ap.add_argument("--kv-pool-tokens", type=int, default=None,
+                    help="device page-pool size in tokens "
+                         "(default: max_slots * max_len)")
+    ap.add_argument("--attn-kernel", action="store_true",
+                    help="route decode attention through the Pallas kernels")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # length handling (previously a silent clamp)
+    ap.add_argument("--clamp", dest="clamp", action="store_true",
+                    default=True,
+                    help="clamp trace lengths into the engine capacity "
+                         "(default; a warning reports every truncation)")
+    ap.add_argument("--no-clamp", dest="clamp", action="store_false",
+                    help="submit trace lengths unmodified; oversized "
+                         "requests get explicit REJECTED outcomes")
+    # async streaming front-end
+    ap.add_argument("--stream", action="store_true",
+                    help="serve with AsyncDuetEngine and print per-token "
+                         "events as JSON lines")
+    return ap
+
+
+def _clamp_lengths(reqs, max_len: int, clamp: bool):
+    """Fit trace lengths to the engine, loudly. Returns the request list."""
+    p_cap, o_cap = max_len // 2, max_len // 4
+    over = [r for r in reqs
+            if r.prompt_len > p_cap or r.output_len > o_cap]
+    if not over:
+        return reqs
+    if clamp:
+        _warn(f"{len(over)}/{len(reqs)} trace requests exceed --max-len "
+              f"{max_len} (prompt cap {p_cap}, output cap {o_cap}); "
+              "clamping lengths — pass --no-clamp to reject them instead")
+        for r in over:
+            r.prompt_len = min(r.prompt_len, p_cap)
+            r.output_len = min(r.output_len, o_cap)
+    else:
+        _warn(f"{len(over)}/{len(reqs)} trace requests exceed --max-len "
+              f"{max_len}; submitting unmodified — the engine will record "
+              "REJECTED outcomes for footprints beyond its KV capacity")
+    return reqs
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    model = Model(cfg)
+    model = Model(cfg, attn_kernel=args.attn_kernel)
     params = model.init(jax.random.PRNGKey(args.seed))
 
     reqs = synth_trace(args.trace, args.num_requests, args.qps,
                        seed=args.seed)
-    # clamp lengths so reduced configs fit the slab
-    for r in reqs:
-        r.prompt_len = min(r.prompt_len, args.max_len // 2)
-        r.output_len = min(r.output_len, args.max_len // 4)
+    reqs = _clamp_lengths(reqs, args.max_len, args.clamp)
 
-    engine = DuetEngine(model, params, EngineConfig(
+    ec = EngineConfig(
         max_slots=args.max_slots, max_len=args.max_len,
-        token_budget=args.token_budget, tbt_slo=args.tbt_slo))
-    engine.submit(reqs)
-    metrics = engine.run()
-    out = metrics.summary()
+        token_budget=args.token_budget, tbt_slo=args.tbt_slo,
+        paged=args.paged, page_size=args.page_size,
+        kv_pool_tokens=args.kv_pool_tokens,
+        temperature=args.temperature)
+
+    if args.stream:
+        engine = AsyncDuetEngine(model, params, ec, seed=args.seed)
+        engine.submit(reqs)   # open-loop: arrivals replay on the inbox
+        for ev in engine.events():
+            if isinstance(ev, TokenEvent):
+                print(json.dumps({"event": "token", "rid": ev.rid,
+                                  "index": ev.index, "token": ev.token,
+                                  "t": round(ev.t, 6)}))
+            elif isinstance(ev, FinishEvent):
+                print(json.dumps({"event": "finish", "rid": ev.rid,
+                                  "reason": ev.reason,
+                                  "n_tokens": ev.n_tokens,
+                                  "t": round(ev.t, 6)}))
+        metrics = engine.run()   # drained: collects metrics only
+        out = metrics.summary()
+        out["dispatch_stats"] = dataclasses.asdict(engine.dstats)
+    else:
+        engine = DuetEngine(model, params, ec, seed=args.seed)
+        engine.submit(reqs)
+        metrics = engine.run()
+        out = metrics.summary()
     out["duet_fraction"] = engine.mux.stats.duet_fraction
     out["iterations"] = engine.mux.stats.iterations
     print(json.dumps(out, indent=2))

@@ -11,8 +11,11 @@ from repro.serving.simulator import (ClusterSim, DisaggSim, InstanceSim,
                                      make_baseline_instance,
                                      make_duet_instance)
 from repro.serving.engine import DuetEngine, EngineConfig
+from repro.serving.async_engine import (AsyncDuetEngine, DispatchStats,
+                                        FinishEvent, TokenEvent)
 
 __all__ = [
+    "AsyncDuetEngine", "DispatchStats", "FinishEvent", "TokenEvent",
     "Phase", "Request", "ServingMetrics", "TRACES", "synth_trace",
     "synthetic_fixed", "PagedKVCacheManager", "PagePoolConfig", "gather_kv",
     "init_page_pools", "write_kv_page", "ChunkedPrefillPolicy", "DuetPolicy",

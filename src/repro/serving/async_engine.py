@@ -1,0 +1,460 @@
+"""Interruption-free asynchronous serving engine (paper §4.3) with
+streaming admission.
+
+:class:`AsyncDuetEngine` removes the two host round-trips the synchronous
+:class:`~repro.serving.engine.DuetEngine` pays every iteration:
+
+* **Fused super-iteration dispatch** — the k look-ahead decode steps *and*
+  the iteration's prefill chunk compile into a single device program
+  (:func:`repro.core.lookahead.make_superiter_fn`). All sampling happens
+  in-program: the decode input tokens and slot positions live on device
+  (``d_last_tok`` / ``d_pos``) and thread from one program to the next with
+  buffer donation off-CPU, so the host never reads a device value to build
+  the next dispatch. Programs are cached per shape bucket — (k bucket,
+  block-table width bucket, chunk length, finish/sample flags) — so a
+  second iteration in the same bucket compiles nothing
+  (``dstats.cache_hits``).
+
+* **Double-buffered host scheduling** — while iteration *i* executes on
+  device, the host plans iteration *i+1* from last-known loads: admission,
+  page reservation and the duet/aggregated mux decision are pure
+  bookkeeping (greedy decode makes completion deterministic from counts,
+  so planning never needs token *values*). Iteration *i*'s tokens are
+  fetched in one batched ``jax.device_get`` when *i+1* has already been
+  dispatched — at most one blocking host sync per super-iteration
+  (``dstats.host_syncs``), and token values are only ever needed to emit
+  stream events and to replay a preemption victim's sampled outputs.
+
+* **Streaming front-end** — :meth:`submit` accepts requests mid-run (from
+  event callbacks, another thread, or an asyncio task) and the engine
+  yields :class:`TokenEvent` / :class:`FinishEvent` through
+  :meth:`events` (generator), :meth:`run` (callback), or :meth:`astream`
+  (async iterator).
+
+The synchronous engine remains the token-equivalence oracle: greedy decode
+makes the async engine's output streams token-identical on the same trace
+(``tests/test_async_engine.py``), on both the paged and the slab path.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lookahead import make_superiter_fn
+from repro.core.roofline import HardwareSpec, TPU_V5E
+from repro.models.transformer import Model
+from repro.serving.engine import DuetEngine, EngineConfig
+from repro.serving.request import Phase, Request, ServingMetrics
+from repro.serving.scheduler import IterationPlan
+
+
+# --------------------------------------------------------------------- events
+@dataclass(frozen=True)
+class TokenEvent:
+    """One generated token, streamed as soon as its iteration retires."""
+    rid: int
+    token: int
+    index: int          # position in the request's output stream
+    t: float            # virtual-clock emission time
+
+
+@dataclass(frozen=True)
+class FinishEvent:
+    """Terminal outcome of a request (completed or rejected)."""
+    rid: int
+    reason: str         # "completed" | "rejected:<why>"
+    t: float
+    n_tokens: int
+    output_tokens: List[int] = field(default_factory=list)
+
+
+Event = Union[TokenEvent, FinishEvent]
+
+
+@dataclass
+class DispatchStats:
+    """Dispatch-cache and host-sync accounting for the async engine."""
+    super_iterations: int = 0
+    dispatches: int = 0          # device programs launched
+    host_syncs: int = 0          # blocking device->host fetches
+    cache_hits: int = 0          # dispatches served by a cached program
+    cache_misses: int = 0        # dispatches that compiled a new bucket
+
+    @property
+    def syncs_per_super_iteration(self) -> float:
+        return self.host_syncs / max(1, self.super_iterations)
+
+
+# ------------------------------------------------------------------ in-flight
+@dataclass
+class _DecItem:
+    req: Request
+    slot: int
+    times: List[float] = field(default_factory=list)
+
+
+@dataclass
+class _FirstItem:
+    req: Request
+    fetch_idx: int
+    ts: float
+
+
+@dataclass
+class _Inflight:
+    """Device handles + host metadata of one dispatched super-iteration.
+    The handles are program *outputs* captured at dispatch, so later
+    programs can run before this record is drained."""
+    fetch: List[jax.Array] = field(default_factory=list)
+    toks_idx: int = -1
+    dec_items: List[_DecItem] = field(default_factory=list)
+    first_items: List[_FirstItem] = field(default_factory=list)
+
+
+class AsyncDuetEngine(DuetEngine):
+    """Asynchronous, interruption-free DuetServe engine.
+
+    Inherits all host-side planning from :class:`DuetEngine` (admission,
+    page-granular reservation, look-ahead shrink / victim preemption, duet
+    mux decision) and replaces the execution layer with fused
+    super-iteration programs and a double-buffered dispatch loop.
+    """
+
+    def __init__(self, model: Model, params, engine_cfg: EngineConfig,
+                 hw: HardwareSpec = TPU_V5E, seed: int = 0):
+        super().__init__(model, params, engine_cfg, hw=hw, seed=seed)
+        B = engine_cfg.max_slots
+        # device-resident decode inputs: next token + cache position per slot
+        self.d_last_tok = jnp.zeros((B, 1), jnp.int32)
+        self.d_pos = jnp.zeros((B,), jnp.int32)
+        self.d_key = self.key
+        # donation rebinds cache/pool buffers in place; the CPU backend does
+        # not implement it and would warn on every dispatch
+        self._donate = jax.default_backend() != "cpu"
+        self._programs: dict = {}
+        self.dstats = DispatchStats()
+        self._inbox: deque = deque()
+        self._lock = threading.Lock()
+        self._pending: List[Request] = []
+        self._all: List[Request] = []
+        self._epoch = 0          # first request index of the current run()
+        self._epoch_now = 0.0    # virtual clock when the last run() ended
+        self._inflight: Optional[_Inflight] = None
+
+    # ------------------------------------------------------------- streaming
+    def submit(self, requests: Union[Request, Sequence[Request]],
+               at: Optional[float] = None):
+        """Enqueue requests; callable any time, including mid-run (from an
+        event callback, another thread, or an asyncio task). ``at``
+        overrides the arrival time (pass ``engine.now`` for "now")."""
+        if isinstance(requests, Request):
+            requests = [requests]
+        reqs = list(requests)
+        for r in reqs:
+            self._materialize_prompt(r)
+            if at is not None:
+                r.arrival = at
+        with self._lock:
+            self._inbox.extend(reqs)
+
+    def _ingest(self):
+        with self._lock:
+            new = list(self._inbox)
+            self._inbox.clear()
+        if not new:
+            return
+        self._all.extend(new)
+        self._pending.extend(new)
+        self._pending.sort(key=lambda r: r.arrival)
+
+    def _finish_event(self, r: Request,
+                      t: Optional[float] = None) -> FinishEvent:
+        return FinishEvent(r.rid, r.finish_reason or "completed",
+                           self.now if t is None else t,
+                           len(r.output_tokens), list(r.output_tokens))
+
+    # ------------------------------------------------------------- run loops
+    def run(self, on_event: Optional[Callable[[Event], None]] = None
+            ) -> ServingMetrics:
+        """Serve until every submitted request reaches a terminal state.
+        Returns metrics over the requests ingested since the last run."""
+        for ev in self.events():
+            if on_event is not None:
+                on_event(ev)
+        reqs = self._all[self._epoch:]
+        self._epoch = len(self._all)
+        # duration covers this run's span only, so throughput numbers of a
+        # reused engine are not diluted by earlier epochs
+        duration, self._epoch_now = self.now - self._epoch_now, self.now
+        return ServingMetrics(requests=reqs, duration=duration)
+
+    async def astream(self):
+        """Async iterator over serving events. The blocking engine loop
+        (dispatch, bucket compiles, the per-iteration ``device_get``) runs
+        on a worker thread and events are pumped through an asyncio queue,
+        so concurrent tasks on the loop — e.g. network handlers calling
+        ``submit()`` — keep running. Note: abandoning the iterator early
+        does not stop the engine; it serves the queues to completion."""
+        loop = asyncio.get_running_loop()
+        queue: asyncio.Queue = asyncio.Queue()
+        done = object()
+
+        def pump():
+            try:
+                for ev in self.events():
+                    loop.call_soon_threadsafe(queue.put_nowait, ev)
+            finally:
+                loop.call_soon_threadsafe(queue.put_nowait, done)
+
+        worker = loop.run_in_executor(None, pump)
+        try:
+            while True:
+                ev = await queue.get()
+                if ev is done:
+                    break
+                yield ev
+        finally:
+            await worker   # surfaces engine exceptions
+
+    def events(self) -> Iterator[Event]:
+        """Generator core: open-loop arrival replay plus streaming
+        admission. Terminates when queues, pending arrivals and the inbox
+        are all empty (mirrors the synchronous run loop)."""
+        while True:
+            self._ingest()
+            self.state.admit_arrivals(self._pending, self.now)
+            for r in list(self.state.waiting):
+                if not self._admissible(r):
+                    self.state.waiting.remove(r)
+                    self._reject(r, "kv_footprint_exceeds_capacity")
+                    yield self._finish_event(r)
+                elif r.slot is None and self.free_slots:
+                    r.slot = self.free_slots.pop()
+            plan = self._plan()
+            if not plan.is_idle:
+                yield from self._step(plan)
+                continue
+            # idle: flush the pipeline, then wait for arrivals or stop
+            yield from self._drain()
+            self._ingest()
+            if self._pending:
+                self.now = max(self.now, self._pending[0].arrival)
+                continue
+            if self.state.waiting:
+                # nothing runs and the policy still refuses every waiting
+                # request: no completion can ever free pages
+                for r in list(self.state.waiting):
+                    self.state.waiting.remove(r)
+                    self._reject(r, "kv_admission_starved")
+                    yield self._finish_event(r)
+                continue
+            break
+        yield from self._drain()
+
+    # -------------------------------------------------------- super-iteration
+    def _step(self, plan: IterationPlan) -> Iterator[Event]:
+        """Plan + dispatch one super-iteration, then drain the previous one.
+        Bookkeeping is completion-deterministic (greedy decode), so the
+        whole plan is built from host state while the previous iteration is
+        still executing on device."""
+        self.dstats.super_iterations += 1
+        # a preemption-resume chunk that replays already-sampled outputs
+        # (its token slice reaches past the prompt, or it finishes and
+        # feeds output_tokens[-1] back as the decode input) is the only
+        # plan input that needs device token values — catch up only then,
+        # so earlier chunks of a long resume prefill keep the overlap
+        if any(r.resume_len and (r.prefilled + c > r.prompt_len
+                                 or c >= r.remaining_prompt)
+               for r, c in plan.prefill):
+            yield from self._drain()
+
+        k, t_d, t_p = self._iteration_timing(plan)
+
+        kb, ran = (self._plan_decode_batch(plan.decode, k)
+                   if plan.decode else (0, []))
+        dec_items = [_DecItem(r, r.slot) for r in ran]
+        for r in ran:
+            self.kv_mgr.commit_tokens(r.rid, kb)
+        # snapshot the decode dispatch inputs NOW: a request completing in
+        # this iteration is retired below (its pages return to the pool, as
+        # in the synchronous engine), so its block-table row must be
+        # captured while it still owns its pages
+        dec_args = self._decode_args(ran, kb)
+        # decode token accounting at t_d spacing (before prefill, matching
+        # the synchronous engine): values arrive at drain time
+        for j in range(1, kb + 1):
+            ts = self.now + j * t_d
+            for it in dec_items:
+                if not it.req.done:
+                    it.req.record_token(ts)
+                    it.times.append(ts)
+                    if it.req.done:
+                        self.state.running.remove(it.req)
+                        self._retire(it.req)
+
+        pre_items = []
+        for r, chunk in plan.prefill:
+            if r.phase != Phase.PREFILL:
+                continue   # preempted earlier in this iteration
+            if not self._ensure_pages(r, chunk):
+                continue   # deferred: decode completions free pages
+            self.kv_mgr.allocate(r.rid, chunk)
+            start = r.prefilled
+            toks_np = r.prefill_token_ids()[start:start + chunk]
+            # a short slice means a resume replay ran ahead of the drain
+            # gate — fail loudly rather than dispatch a truncated chunk
+            assert len(toks_np) == chunk, \
+                "prefill chunk dispatched with stale host token values"
+            r.prefilled += chunk
+            if r.remaining_prompt > 0:
+                status = "continue"
+            elif r.resume_len:
+                status = "resumed"
+            else:
+                status = "first"
+            # snapshot the chunk's block table before any retire below can
+            # free the pages (an output_len==1 request finishes here)
+            if self.paged:
+                pwidth = self._table_width([r.rid])
+                ptbl = self.kv_mgr.padded_tables([r.rid], pwidth)
+            else:
+                pwidth, ptbl = 1, np.zeros((1, 1), np.int32)
+            pre_items.append((r, chunk, start, toks_np, status, ptbl,
+                              pwidth))
+            if status in ("first", "resumed"):
+                self.state.prefilling.remove(r)
+                r.phase = Phase.DECODE
+                if status == "first":
+                    r.record_token(self.now + t_p)
+                if r.done:
+                    self._retire(r)
+                else:
+                    self.state.running.append(r)
+
+        # device dispatch: decode fuses with the first prefill chunk into
+        # one program; extra chunks ride prefill-only programs (more
+        # dispatches, still zero extra host syncs)
+        inf = _Inflight(dec_items=dec_items)
+        if ran or pre_items:
+            self._dispatch(inf, kb if ran else 0, dec_args,
+                           pre_items[0] if pre_items else None, t_p)
+            for item in pre_items[1:]:
+                self._dispatch(inf, 0, None, item, t_p)
+        prev, self._inflight = self._inflight, (inf if inf.fetch else None)
+        if prev is not None:
+            yield from self._drain_record(prev)
+        self.now += self._iteration_span(plan, kb, t_d, t_p)
+
+    # ---------------------------------------------------------------- device
+    def _program(self, key, kb, chunk, finish, sample):
+        prog = self._programs.get(key)
+        if prog is None:
+            self.dstats.cache_misses += 1
+            prog = make_superiter_fn(
+                self.model, kb, paged=self.paged, chunk=chunk,
+                finish=finish, sample=sample,
+                temperature=self.ec.temperature, donate=self._donate)
+            self._programs[key] = prog
+        else:
+            self.dstats.cache_hits += 1
+        return prog
+
+    def _dispatch(self, inf: _Inflight, kb: int, dec_args, pre_item,
+                  t_p: float):
+        """Launch one fused program; capture its output handles in `inf`.
+        Everything here is host->device only — no blocking reads."""
+        B = self.ec.max_slots
+        if dec_args is None:
+            dec_args = (np.zeros(B, bool), np.zeros((B, 1), np.int32), 1)
+        active, tbl, width = dec_args
+
+        if pre_item is not None:
+            r, chunk, start, toks_np, status, ptbl, pwidth = pre_item
+            finish = status in ("first", "resumed")
+            sample = status == "first"
+            pre_toks = jnp.asarray(toks_np)[None, :]
+            pre_tbl = jnp.asarray(ptbl)
+            pre_start = jnp.int32(start)
+            pre_slot = jnp.int32(r.slot)
+            if finish and not sample:
+                # resume finish: the pre-preemption next token becomes the
+                # decode input — the _step drain gate must have caught us up
+                assert len(r.output_tokens) == r.generated, \
+                    "resume dispatched with stale host token values"
+                override = jnp.int32(r.output_tokens[-1])
+            else:
+                override = jnp.int32(0)
+        else:
+            chunk, finish, sample, pwidth = 0, False, False, 1
+            pre_toks = jnp.zeros((1, 1), jnp.int32)
+            pre_tbl = jnp.zeros((1, 1), jnp.int32)
+            pre_start = jnp.int32(0)
+            pre_slot = jnp.int32(0)
+            override = jnp.int32(0)
+
+        key = (self.paged, kb, width if kb else 0, chunk,
+               pwidth if chunk else 0, finish, sample)
+        prog = self._program(key, kb, chunk, finish, sample)
+        self.dstats.dispatches += 1
+        if self.paged:
+            (toks, sampled, self.d_last_tok, self.d_pos, self.pools,
+             self.cache, self.d_key) = prog(
+                self.params, self.pools, self.cache, self.d_last_tok,
+                self.d_pos, jnp.asarray(tbl), self.d_key,
+                jnp.asarray(active), pre_toks, pre_tbl, pre_start,
+                pre_slot, override)
+        else:
+            (toks, sampled, self.d_last_tok, self.d_pos, self.cache,
+             self.d_key) = prog(
+                self.params, self.cache, self.d_last_tok, self.d_pos,
+                self.d_key, jnp.asarray(active), pre_toks, pre_start,
+                pre_slot, override)
+        if kb > 0:
+            inf.toks_idx = len(inf.fetch)
+            inf.fetch.append(toks)
+        if pre_item is not None and sample:
+            inf.first_items.append(
+                _FirstItem(pre_item[0], len(inf.fetch), self.now + t_p))
+            inf.fetch.append(sampled)
+
+    # ----------------------------------------------------------------- drain
+    def _drain(self) -> Iterator[Event]:
+        inf, self._inflight = self._inflight, None
+        if inf is not None:
+            yield from self._drain_record(inf)
+
+    def _drain_record(self, inf: _Inflight) -> Iterator[Event]:
+        """Retire one dispatched super-iteration: fetch every device value it
+        produced in a single blocking sync, append token values to their
+        requests, and emit stream events."""
+        if not inf.fetch:
+            return
+        vals = jax.device_get(inf.fetch)
+        self.dstats.host_syncs += 1
+        if inf.toks_idx >= 0:
+            toks = np.asarray(vals[inf.toks_idx])
+            for it in inf.dec_items:
+                seq = toks[it.slot, :len(it.times)]
+                base = len(it.req.output_tokens)
+                it.req.output_tokens.extend(int(t) for t in seq)
+                for j, (tok, ts) in enumerate(zip(seq, it.times)):
+                    yield TokenEvent(it.req.rid, int(tok), base + j, ts)
+                yield from self._maybe_finish(it.req)
+        for fi in inf.first_items:
+            tok = int(vals[fi.fetch_idx])
+            yield TokenEvent(fi.req.rid, tok, len(fi.req.output_tokens),
+                             fi.ts)
+            fi.req.output_tokens.append(tok)
+            yield from self._maybe_finish(fi.req)
+
+    def _maybe_finish(self, r: Request) -> Iterator[Event]:
+        if r.phase == Phase.FINISHED and \
+                len(r.output_tokens) >= r.output_len:
+            yield self._finish_event(r, t=r.finish_time)

@@ -156,11 +156,16 @@ class DuetEngine:
             lambda full, part: full.at[slot].set(part[0]), self.cache, sub)
 
     # ------------------------------------------------------------ lifecycle
+    def _materialize_prompt(self, r: Request):
+        """Deterministic rid-derived prompt tokens for trace requests that
+        carry lengths only (shared with the async engine)."""
+        if r.prompt_tokens is None:
+            r.prompt_tokens = np.random.default_rng(r.rid).integers(
+                0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
+
     def submit(self, requests: List[Request]):
-        for r in sorted(requests, key=lambda x: x.arrival):
-            if r.prompt_tokens is None:
-                r.prompt_tokens = np.random.default_rng(r.rid).integers(
-                    0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
+        for r in requests:
+            self._materialize_prompt(r)
         self._pending = sorted(requests, key=lambda r: r.arrival)
 
     # --------------------------------------------------- admission / eviction
@@ -260,15 +265,24 @@ class DuetEngine:
             kb = _k_bucket(kb - 1) if kb > 1 else 0
         return 0
 
-    def _exec_decode(self, decode_reqs: List[Request],
-                     k: int) -> Tuple[int, List[Request]]:
+    def _plan_decode_batch(self, decode_reqs: List[Request],
+                           k: int) -> Tuple[int, List[Request]]:
+        """Host-side half of §4.3 decode planning: reserve look-ahead pages
+        for k steps, shrinking k down the bucket ladder and preempting
+        victims under pool pressure. Returns the bucketed depth and the
+        surviving batch — pure bookkeeping, no device work, so the async
+        engine can plan iteration i+1 while iteration i runs on device."""
         reqs = list(decode_reqs)
         kb = 0
         while reqs:
             # §4.3: preallocate KV pages for all k look-ahead steps up front;
-            # under pool pressure shrink k, then evict a victim
-            want = max(1, min(_k_bucket(k),
-                              min(r.output_len - r.generated for r in reqs)))
+            # under pool pressure shrink k, then evict a victim. The depth
+            # is re-bucketed after capping at the shortest remaining output
+            # so only K_BUCKETS values reach the dispatch caches — a raw
+            # remainder (e.g. 3) would compile a fresh program per tail
+            want = min(_k_bucket(k),
+                       min(r.output_len - r.generated for r in reqs))
+            want = _k_bucket(max(1, want))
             kb = self._reserve_for(reqs, want)
             if kb:
                 break
@@ -282,21 +296,40 @@ class DuetEngine:
             victim = max(reqs, key=lambda r: r.arrival)
             reqs.remove(victim)
             self._preempt(victim)
+        return kb, reqs
+
+    def _decode_args(self, dec_reqs: List[Request], kb: int):
+        """Decode-dispatch inputs (active mask, block tables, width bucket)
+        for the current batch. Must be called while every batch member
+        still owns its pages — the async engine retires completing
+        requests before its dispatch runs."""
+        B = self.ec.max_slots
+        active = np.zeros(B, bool)
+        for r in dec_reqs:
+            active[r.slot] = True
+        if self.paged and kb > 0 and dec_reqs:
+            width = self._table_width([r.rid for r in dec_reqs])
+            tbl = np.zeros((B, width), np.int32)
+            rows = self.kv_mgr.padded_tables([r.rid for r in dec_reqs],
+                                             width)
+            for r, row in zip(dec_reqs, rows):
+                tbl[r.slot] = row
+        else:
+            width = 1
+            tbl = np.zeros((B, 1), np.int32)
+        return active, tbl, width
+
+    def _exec_decode(self, decode_reqs: List[Request],
+                     k: int) -> Tuple[int, List[Request]]:
+        kb, reqs = self._plan_decode_batch(decode_reqs, k)
         if not reqs:
             return 0, []
-        active = np.zeros(self.ec.max_slots, bool)
-        for r in reqs:
-            active[r.slot] = True
+        active, tbl, _ = self._decode_args(reqs, kb)
         first = jnp.asarray(self.slot_last_token)[:, None]
         pos = jnp.asarray(self.slot_pos)
         self.key, sub = jax.random.split(self.key)
         fn = self._decode_fn(kb)
         if self.paged:
-            width = self._table_width([r.rid for r in reqs])
-            tbl = np.zeros((self.ec.max_slots, width), np.int32)
-            rows = self.kv_mgr.padded_tables([r.rid for r in reqs], width)
-            for r, row in zip(reqs, rows):
-                tbl[r.slot] = row
             toks, self.pools, self.cache, new_pos = fn(
                 self.params, self.pools, self.cache, first, pos,
                 jnp.asarray(tbl), sub, jnp.asarray(active))
@@ -363,19 +396,30 @@ class DuetEngine:
         self.state.prefilling = sched_state.prefilling
         return plan
 
-    def _execute(self, plan: IterationPlan):
-        pre_loads, dec_loads = plan.loads()
+    def _iteration_timing(self, plan: IterationPlan):
+        """(k, t_decode, t_prefill) for this iteration from the roofline
+        decision. Shared by the sync and async engines — their virtual
+        clocks must advance identically for the oracle equivalence to
+        extend to TTFT/TBT metrics."""
         if plan.mode == "duet" and plan.decision.partition is not None:
             part = plan.decision.partition
-            k = part.k
-            t_d, t_p = part.t_decode, part.t_prefill
-        else:
-            k = 1
-            t_iter = self.mux.predict_mixed(pre_loads + dec_loads) \
-                + self.ec.sched_overhead \
-                + (self.ec.dispatch_overhead if plan.prefill else 0.0)
-            t_d = t_p = t_iter
+            return part.k, part.t_decode, part.t_prefill
+        pre_loads, dec_loads = plan.loads()
+        t_iter = self.mux.predict_mixed(pre_loads + dec_loads) \
+            + self.ec.sched_overhead \
+            + (self.ec.dispatch_overhead if plan.prefill else 0.0)
+        return 1, t_iter, t_iter
 
+    def _iteration_span(self, plan: IterationPlan, kb: int, t_d: float,
+                        t_p: float) -> float:
+        """Wall-clock span of this iteration on the virtual TPU clock."""
+        if plan.mode == "duet" and plan.decision.partition is not None:
+            return max(kb * t_d, t_p) + self.ec.sched_overhead \
+                + self.ec.dispatch_overhead
+        return t_d
+
+    def _execute(self, plan: IterationPlan):
+        k, t_d, t_p = self._iteration_timing(plan)
         kb, ran = (self._exec_decode(plan.decode, k)
                    if plan.decode else (0, []))
         # metrics: decode tokens at t_d spacing (decode dispatched first).
@@ -402,12 +446,7 @@ class DuetEngine:
                     self._retire(r)
                 else:
                     self.state.running.append(r)
-        if plan.mode == "duet" and plan.decision.partition is not None:
-            span = max(kb * t_d, t_p) + self.ec.sched_overhead \
-                + self.ec.dispatch_overhead
-        else:
-            span = t_d
-        self.now += span
+        self.now += self._iteration_span(plan, kb, t_d, t_p)
 
     def _retire(self, r: Request):
         self.kv_mgr.free(r.rid)

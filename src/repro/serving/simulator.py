@@ -70,6 +70,17 @@ class SimConfig:
     # the roofline pads KV reads the same way (page_size=1 = token-granular,
     # the pre-paging behaviour).
     page_size: int = 1
+    # host-synchronisation model (paper §4.3): each blocking device->host
+    # round-trip costs `host_sync_overhead`. The interruption-free engine
+    # pays one per super-iteration; a synchronous engine pays one per
+    # decode step (the hidden overhead duet mode amplifies — k fetches per
+    # super-iteration) plus one per *finishing* prefill chunk (the host
+    # argmax of the first token). 0.0 disables the term (legacy
+    # behaviour). ``interruption_free`` defaults to True because the
+    # repo's engines are now interruption-free — set it False explicitly
+    # when modelling a synchronous engine generation.
+    host_sync_overhead: float = 0.0
+    interruption_free: bool = True
 
 
 class InstanceSim:
@@ -96,11 +107,25 @@ class InstanceSim:
         self.state.running.remove(r)
         self.finished.append(r)
 
+    def _host_sync_cost(self, plan: IterationPlan, k: int) -> float:
+        """§4.3 host-synchronisation term: the interruption-free engine
+        fetches once per super-iteration; a synchronous engine blocks
+        after every decode step and on every finishing prefill chunk's
+        first-token argmax (continue-chunks dispatch without read-back)."""
+        h = self.sim.host_sync_overhead
+        if h == 0.0:
+            return 0.0
+        if self.sim.interruption_free:
+            return h
+        finishing = sum(1 for r, c in plan.prefill
+                        if c >= r.remaining_prompt)
+        return h * ((k if plan.decode else 0) + finishing)
+
     def _apply_aggregated(self, plan: IterationPlan):
         pre_loads, dec_loads = plan.loads()
         t = self.model.iteration_latency(pre_loads + dec_loads,
                                          units=self.sim.units)
-        t += self.sim.sched_overhead
+        t += self.sim.sched_overhead + self._host_sync_cost(plan, 1)
         if plan.prefill:
             t += self.sim.dispatch_overhead
         if self.record_trace:
@@ -120,7 +145,8 @@ class InstanceSim:
         part = plan.decision.partition
         k = part.k
         span = max(k * part.t_decode, part.t_prefill) \
-            + self.sim.sched_overhead + self.sim.dispatch_overhead
+            + self.sim.sched_overhead + self.sim.dispatch_overhead \
+            + self._host_sync_cost(plan, k)
         if self.record_trace:
             self.trace.append({
                 "t": self.now, "mode": "duet", "dur": span, "k": k,

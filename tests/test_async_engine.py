@@ -1,0 +1,187 @@
+"""Async interruption-free engine (ISSUE 2 tentpole): token-stream
+equivalence vs the synchronous oracle (paged and slab), mid-run streaming
+submission, dispatch-cache hit accounting, the one-blocking-sync-per-
+super-iteration contract, and preemption-resume under pool pressure."""
+import asyncio
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import (AsyncDuetEngine, DuetEngine, EngineConfig,
+                           FinishEvent, Request, TokenEvent)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("qwen3-4b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _workload(specs):
+    return [Request(rid=rid, arrival=a, prompt_len=p, output_len=o)
+            for rid, a, p, o in specs]
+
+
+def _sync_ref(model, params, specs, **cfg_kw):
+    eng = DuetEngine(model, params, EngineConfig(**cfg_kw))
+    eng.submit(_workload(specs))
+    metrics = eng.run()
+    return {r.rid: list(r.output_tokens) for r in metrics.requests}
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_async_token_stream_matches_sync_oracle(small_model, paged):
+    """The async engine must produce token-identical outputs to the
+    synchronous oracle on the same trace, in both KV modes — and the
+    event stream must reconstruct those outputs exactly, in order."""
+    cfg, model, params = small_model
+    specs = [(i, i * 0.02, 20 + 7 * i, 4 + i) for i in range(5)]
+    kw = dict(max_slots=3, max_len=128, token_budget=48, page_size=8,
+              paged=paged)
+    ref = _sync_ref(model, params, specs, **kw)
+
+    eng = AsyncDuetEngine(model, params, EngineConfig(**kw))
+    eng.submit(_workload(specs))
+    stream, finals = {}, {}
+    for ev in eng.events():
+        if isinstance(ev, TokenEvent):
+            toks = stream.setdefault(ev.rid, [])
+            assert ev.index == len(toks)          # in-order, gapless
+            toks.append(ev.token)
+        elif isinstance(ev, FinishEvent):
+            finals[ev.rid] = ev
+    metrics = eng.run()
+    got = {r.rid: list(r.output_tokens) for r in metrics.requests}
+
+    assert got == ref
+    assert stream == ref
+    assert metrics.summary()["num_finished"] == len(specs)
+    assert all(finals[rid].reason == "completed" and
+               finals[rid].output_tokens == ref[rid] for rid in ref)
+    assert eng.kv_mgr.used_pages == 0
+
+
+def test_single_blocking_sync_per_superiteration(small_model):
+    """§4.3 contract: at most one blocking device->host fetch per
+    super-iteration, regardless of look-ahead depth or prefill chunks."""
+    cfg, model, params = small_model
+    specs = [(i, i * 0.01, 24, 8) for i in range(4)]
+    eng = AsyncDuetEngine(model, params, EngineConfig(
+        max_slots=3, max_len=128, token_budget=48, page_size=8))
+    eng.submit(_workload(specs))
+    eng.run()
+    st = eng.dstats
+    assert st.super_iterations > 0
+    assert 0 < st.host_syncs <= st.super_iterations
+    assert st.syncs_per_super_iteration <= 1.0
+    # every dispatch is either a fresh bucket compile or a cache hit
+    assert st.cache_hits + st.cache_misses == st.dispatches
+
+
+def test_dispatch_cache_second_same_bucket_compiles_nothing(small_model):
+    """A repeated workload with identical shape buckets must be served
+    entirely from the dispatch cache: zero new compiles."""
+    cfg, model, params = small_model
+    specs = [(0, 0.0, 24, 6), (1, 0.01, 24, 6)]
+    kw = dict(max_slots=2, max_len=128, token_budget=48, page_size=8)
+    eng = AsyncDuetEngine(model, params, EngineConfig(**kw))
+    eng.submit(_workload(specs))
+    eng.run()
+    warm_misses = eng.dstats.cache_misses
+    assert warm_misses > 0
+
+    # same shapes and relative arrivals, fresh requests, same engine ->
+    # the iteration sequence repeats and every bucket is already hot
+    t0 = eng.now
+    eng.submit(_workload([(10, t0 + 0.0, 24, 6), (11, t0 + 0.01, 24, 6)]))
+    m = eng.run()
+    assert m.summary()["num_finished"] == 2
+    assert eng.dstats.cache_misses == warm_misses
+    assert eng.dstats.cache_hits > 0
+
+
+def test_mid_run_streaming_submission(small_model):
+    """submit() during serving (from an event callback) must admit the new
+    request mid-run and generate exactly the tokens it gets served alone."""
+    cfg, model, params = small_model
+    kw = dict(max_slots=3, max_len=128, token_budget=48, page_size=8)
+    solo = _sync_ref(model, params, [(1, 0.0, 31, 6)], **kw)
+
+    eng = AsyncDuetEngine(model, params, EngineConfig(**kw))
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=25, output_len=8))
+    injected = []
+
+    def on_event(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == 0 and ev.index == 2 \
+                and not injected:
+            injected.append(True)
+            eng.submit(Request(rid=1, arrival=0.0, prompt_len=31,
+                               output_len=6), at=eng.now)
+
+    metrics = eng.run(on_event)
+    assert injected, "callback never fired mid-run"
+    got = {r.rid: list(r.output_tokens) for r in metrics.requests}
+    assert metrics.summary()["num_finished"] == 2
+    assert got[1] == solo[1]
+    # the injected request arrived mid-run, not at the trace start
+    rid1 = next(r for r in metrics.requests if r.rid == 1)
+    assert rid1.arrival > 0.0
+
+
+def test_async_preemption_resume_equivalence(small_model):
+    """Tiny page pool: the async engine must shrink k / preempt+requeue
+    exactly like the oracle and still emit identical token streams (the
+    resume prefill replays host-fetched output tokens)."""
+    cfg, model, params = small_model
+    specs = [(i, 0.0, 20, 12) for i in range(2)]
+    kw = dict(max_slots=2, max_len=64, token_budget=32, page_size=4,
+              paged=True, kv_pool_tokens=56)
+    ref = _sync_ref(model, params, specs, **kw)
+
+    eng = AsyncDuetEngine(model, params, EngineConfig(**kw))
+    eng.submit(_workload(specs))
+    metrics = eng.run()
+    s = metrics.summary()
+    got = {r.rid: list(r.output_tokens) for r in metrics.requests}
+    assert got == ref
+    assert s["num_finished"] == 2 and s["num_rejected"] == 0
+    assert s["num_preemptions"] >= 1
+    assert eng.dstats.host_syncs <= eng.dstats.super_iterations
+    assert eng.kv_mgr.used_pages == 0
+
+
+def test_async_rejects_oversized_with_events(small_model):
+    """Footprints that can never fit produce FinishEvents with an explicit
+    rejected reason — never silent drops."""
+    cfg, model, params = small_model
+    eng = AsyncDuetEngine(model, params, EngineConfig(
+        max_slots=2, max_len=32, token_budget=48, page_size=8, paged=True,
+        kv_pool_tokens=64))
+    eng.submit(_workload([(0, 0.0, 200, 8), (1, 0.0, 10, 4)]))
+    finals = {}
+    for ev in eng.events():
+        if isinstance(ev, FinishEvent):
+            finals[ev.rid] = ev.reason
+    assert finals[0].startswith("rejected")
+    assert finals[1] == "completed"
+
+
+def test_async_iterator_front_end(small_model):
+    """astream() yields the same events through an asyncio interface."""
+    cfg, model, params = small_model
+
+    async def drive():
+        eng = AsyncDuetEngine(model, params, EngineConfig(
+            max_slots=2, max_len=64, token_budget=32, page_size=8))
+        eng.submit(Request(rid=3, arrival=0.0, prompt_len=20, output_len=4))
+        toks = []
+        async for ev in eng.astream():
+            if isinstance(ev, TokenEvent):
+                toks.append(ev.token)
+        return toks
+
+    assert len(asyncio.run(drive())) == 4

@@ -9,8 +9,34 @@ from repro.launch.train import main as train_main
 def test_serve_cli(capsys):
     serve_main(["--arch", "qwen3-4b", "--reduced", "--num-requests", "4",
                 "--qps", "20", "--max-len", "256", "--token-budget", "64"])
+    captured = capsys.readouterr()
+    assert '"num_finished": 4' in captured.out
+    # clamping is no longer silent: the truncation is reported on stderr
+    assert "warning:" in captured.err and "clamping" in captured.err
+
+
+def test_serve_cli_stream(capsys):
+    """--stream serves through AsyncDuetEngine: JSONL token/finish events
+    followed by a summary that carries the dispatch/sync counters."""
+    import json
+    serve_main(["--arch", "qwen3-4b", "--reduced", "--num-requests", "3",
+                "--qps", "20", "--max-len", "128", "--token-budget", "32",
+                "--stream"])
     out = capsys.readouterr().out
-    assert '"num_finished": 4' in out
+    events = [json.loads(line) for line in out.splitlines()
+              if line.startswith('{"event"')]
+    assert sum(1 for e in events if e["event"] == "finish") == 3
+    assert any(e["event"] == "token" for e in events)
+    assert '"num_finished": 3' in out
+    assert '"dispatch_stats"' in out and '"host_syncs"' in out
+
+
+def test_serve_cli_slab_mode(capsys):
+    """--no-paged routes through the slab oracle engine."""
+    serve_main(["--arch", "qwen3-4b", "--reduced", "--num-requests", "3",
+                "--qps", "20", "--max-len", "128", "--token-budget", "32",
+                "--no-paged"])
+    assert '"num_finished": 3' in capsys.readouterr().out
 
 
 def test_train_cli(capsys):

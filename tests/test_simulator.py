@@ -69,6 +69,31 @@ def test_kv_bytes_per_token():
     assert mla < b
 
 
+def test_host_sync_overhead_models_interruption_free_gain():
+    """§4.3 host-overhead model: a synchronous engine pays one blocking
+    sync per decode step (k per duet super-iteration) plus one per prefill
+    chunk; the interruption-free engine pays exactly one. With the term
+    enabled the synchronous configuration must be strictly slower, and the
+    default (0.0) must leave legacy timings untouched."""
+    reqs = synth_trace("azure-conv", 60, qps=4.0, seed=3)
+    legacy = make_duet_instance(CFG, SimConfig(units=1, tp=1)).run(reqs)
+    zero = make_duet_instance(CFG, SimConfig(
+        units=1, tp=1, host_sync_overhead=0.0,
+        interruption_free=False)).run(reqs)
+    assert zero.duration == legacy.duration   # 0.0 disables the term
+
+    async_eng = make_duet_instance(CFG, SimConfig(
+        units=1, tp=1, host_sync_overhead=0.002,
+        interruption_free=True)).run(reqs)
+    sync_eng = make_duet_instance(CFG, SimConfig(
+        units=1, tp=1, host_sync_overhead=0.002,
+        interruption_free=False)).run(reqs)
+    assert async_eng.duration > legacy.duration     # overhead is modelled
+    assert sync_eng.duration > async_eng.duration   # and §4.3 removes most
+    assert sync_eng.summary()["mean_tbt_s"] >= \
+        async_eng.summary()["mean_tbt_s"]
+
+
 def test_metrics_summary_percentiles():
     reqs = synth_trace("azure-conv", 30, qps=2.0, seed=2)
     m = make_duet_instance(CFG, SimConfig(units=8, tp=8)).run(reqs).summary()
