@@ -4,9 +4,12 @@ scheduler consumes: *aggregated* execution by default, *duet* (spatially
 multiplexed) execution only when a TBT violation is predicted.
 
 The controller also owns the profiled Π(S)/B(S) tables. The paper profiles
-these with microbenchmarks at engine start; here they are analytic TPU curves
-(linear per chip — DESIGN.md §2), but the table indirection is kept so a real
-deployment can drop in measured values.
+these with microbenchmarks at engine start; here they default to analytic
+TPU curves (linear per chip — DESIGN.md §2) sampled at every integer unit
+count, and the roofline consults the *tables* (piecewise-linear) for every
+latency estimate — so a real deployment drops measured values in via the
+``pi_table``/``bw_table`` constructor args and Algorithm 1 runs against
+them unchanged.
 """
 from __future__ import annotations
 
@@ -31,6 +34,46 @@ class MultiplexerStats:
         return self.duet_iterations / max(1, self.iterations)
 
 
+class TabulatedPartitionCurves:
+    """Π(S)/B(S) hardware curves backed by per-unit tables (paper: profiled
+    at engine start). Behaves like a :class:`HardwareSpec` — the roofline
+    calls ``pi``/``bw`` and reads spec constants through delegation.
+
+    Integer unit counts read the table directly; fractional counts in the
+    table range interpolate linearly between the bracketing entries; counts
+    below one unit (kernel-grid slots expressed as chip fractions) scale
+    the one-unit table entry by the base spec's sub-unit curve shape, so an
+    analytic table reproduces the base spec exactly."""
+
+    def __init__(self, base: HardwareSpec, pi_table: Dict[int, float],
+                 bw_table: Dict[int, float]):
+        self._base = base
+        self._pi = dict(pi_table)
+        self._bw = dict(bw_table)
+        self._n = max(self._pi)
+
+    def _lookup(self, table: Dict[int, float], base_curve, units: float
+                ) -> float:
+        if units < 1.0:
+            return table[1] * base_curve(units) / max(base_curve(1), 1e-30)
+        if units >= self._n:
+            return table[self._n] * units / self._n
+        lo = int(units)
+        frac = units - lo
+        if frac == 0.0:
+            return table[lo]
+        return table[lo] + frac * (table[lo + 1] - table[lo])
+
+    def pi(self, units: float) -> float:
+        return self._lookup(self._pi, self._base.pi, units)
+
+    def bw(self, units: float) -> float:
+        return self._lookup(self._bw, self._base.bw, units)
+
+    def __getattr__(self, item):
+        return getattr(self._base, item)
+
+
 class AdaptiveMultiplexer:
     """Per-iteration mode decision for one engine replica.
 
@@ -42,29 +85,36 @@ class AdaptiveMultiplexer:
         happens at kernel-grid granularity — see kernels/duet_attention).
       tbt_slo: decode TBT bound (s).
       tp: tensor-parallel degree inside the replica.
+      pi_table/bw_table: measured Π(S)/B(S) curves keyed by unit count
+        (1..total_units). Default: sampled from the analytic ``hw`` spec.
+        Every roofline estimate this controller makes goes through the
+        tables, so dropping in profiled values changes the decisions.
     """
 
     def __init__(self, cfg: ArchConfig, *, hw: HardwareSpec = TPU_V5E,
                  total_units: int = 256, tbt_slo: float = 0.1, tp: int = 1,
                  unit_step: int = 1, granularity: int = 64,
                  sliding_window: Optional[int] = None,
-                 mla_absorb: bool = False, page_size: int = 1):
+                 mla_absorb: bool = False, page_size: int = 1,
+                 pi_table: Optional[Dict[int, float]] = None,
+                 bw_table: Optional[Dict[int, float]] = None):
         self.cfg = cfg
         self.hw = hw
         self.total_units = total_units
         self.tbt_slo = tbt_slo
         self.unit_step = unit_step
-        self.model = RooflineModel(cfg, hw, tp=tp,
-                                   sliding_window=sliding_window,
-                                   mla_absorb=mla_absorb,
-                                   page_size=page_size)
-        self.stats = MultiplexerStats()
-        # profiled partition curves (analytic on TPU; table kept for parity
-        # with the paper's init-time profiling step)
-        self.pi_table: Dict[int, float] = {
+        # profiled partition curves (paper: microbenchmarked at engine
+        # start; analytic fallback here). The roofline model reads hardware
+        # throughput/bandwidth exclusively through these tables.
+        self.pi_table: Dict[int, float] = dict(pi_table) if pi_table else {
             u: hw.pi(u) for u in range(1, total_units + 1)}
-        self.bw_table: Dict[int, float] = {
+        self.bw_table: Dict[int, float] = dict(bw_table) if bw_table else {
             u: hw.bw(u) for u in range(1, total_units + 1)}
+        self.model = RooflineModel(
+            cfg, TabulatedPartitionCurves(hw, self.pi_table, self.bw_table),
+            tp=tp, sliding_window=sliding_window, mla_absorb=mla_absorb,
+            page_size=page_size)
+        self.stats = MultiplexerStats()
         # grid-granularity variant: when the replica is one chip, Algorithm 1
         # enumerates fused-kernel grid slots instead of chips.
         self.granularity = granularity
@@ -73,7 +123,6 @@ class AdaptiveMultiplexer:
     def step(self, prefill_reqs: Sequence[RequestLoad],
              decode_reqs: Sequence[RequestLoad]) -> ScheduleDecision:
         units = self.total_units if self.total_units > 1 else self.granularity
-        scale = 1.0 if self.total_units > 1 else 1.0 / self.granularity
         model = self.model
         if self.total_units == 1:
             # fractional-chip partitioning: express grid slots as fractional

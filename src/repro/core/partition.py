@@ -66,8 +66,14 @@ def optimize_partition(model: RooflineModel,
         k_base = int(t_p / t_d) if t_d > 0 else 1
         for k in (k_base, k_base + 1):
             k = max(1, min(k, max_k))
-            # decode must still meet TBT when run k times back-to-back
-            if t_d > tbt_slo:
+            # §4.2: the decode stream must meet τ_TBT *across* the
+            # super-iteration boundary too. Tokens inside the iteration are
+            # t_d apart, but when k·t_d < t_p the last decode token waits
+            # out the prefill remainder before the next iteration's first
+            # step, so the worst inter-token gap is
+            # t_d + max(0, t_p − k·t_d). This bites when k under-covers
+            # t_p — a large remainder at k_base, or the max_k clamp.
+            if t_d + max(0.0, t_p - k * t_d) > tbt_slo:
                 continue
             span = max(k * t_d, t_p)
             if span <= 0:

@@ -28,6 +28,7 @@ import json
 import sys
 
 import jax
+import numpy as np
 
 from repro.configs import get_config, list_configs, reduced
 from repro.models.transformer import Model
@@ -35,6 +36,7 @@ from repro.serving.async_engine import (AsyncDuetEngine, FinishEvent,
                                         TokenEvent)
 from repro.serving.engine import DuetEngine, EngineConfig
 from repro.serving.kvcache import DEFAULT_PAGE_SIZE
+from repro.serving.request import synth_prompt_tokens
 from repro.serving.traces import TRACES, synth_trace
 
 
@@ -69,6 +71,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--attn-kernel", action="store_true",
                     help="route decode attention through the Pallas kernels")
     ap.add_argument("--temperature", type=float, default=0.0)
+    # copy-on-write prefix caching (paged mode only; default: follow
+    # --paged, so --no-paged alone never warns about a flag nobody passed)
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="share prompt-prefix KV pages across requests "
+                         "(default in paged mode)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prefix sharing (cold-cache baseline)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend a common system prompt of this many "
+                         "tokens to every trace request (exercises the "
+                         "prefix cache)")
     # length handling (previously a silent clamp)
     ap.add_argument("--clamp", dest="clamp", action="store_true",
                     default=True,
@@ -82,6 +97,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="serve with AsyncDuetEngine and print per-token "
                          "events as JSON lines")
     return ap
+
+
+def _apply_shared_prefix(reqs, prefix_len: int, vocab_size: int, seed: int):
+    """Prepend one common system prompt to every request (the per-request
+    body comes from the same rid-seeded derivation the engine uses, so
+    --shared-prefix-len 0 and the default path produce identical bodies).
+    Runs *before* length clamping: the prefix counts against the caps."""
+    if prefix_len <= 0:
+        return reqs
+    common = np.random.default_rng(10_000 + seed).integers(
+        0, vocab_size, prefix_len).astype(np.int32)
+    for r in reqs:
+        body = synth_prompt_tokens(r.rid, vocab_size, r.prompt_len)
+        r.prompt_tokens = np.concatenate([common, body])
+        r.prompt_len += prefix_len
+    return reqs
 
 
 def _clamp_lengths(reqs, max_len: int, clamp: bool):
@@ -98,6 +129,8 @@ def _clamp_lengths(reqs, max_len: int, clamp: bool):
         for r in over:
             r.prompt_len = min(r.prompt_len, p_cap)
             r.output_len = min(r.output_len, o_cap)
+            if r.prompt_tokens is not None:
+                r.prompt_tokens = r.prompt_tokens[:r.prompt_len]
     else:
         _warn(f"{len(over)}/{len(reqs)} trace requests exceed --max-len "
               f"{max_len}; submitting unmodified — the engine will record "
@@ -116,13 +149,22 @@ def main(argv=None):
 
     reqs = synth_trace(args.trace, args.num_requests, args.qps,
                        seed=args.seed)
+    reqs = _apply_shared_prefix(reqs, args.shared_prefix_len,
+                                cfg.vocab_size, args.seed)
     reqs = _clamp_lengths(reqs, args.max_len, args.clamp)
+
+    if args.prefix_cache and not args.paged:
+        # only reachable when --prefix-cache was passed explicitly
+        _warn("--prefix-cache requires paged KV; running without it")
+    prefix_cache = args.paged if args.prefix_cache is None \
+        else args.prefix_cache
 
     ec = EngineConfig(
         max_slots=args.max_slots, max_len=args.max_len,
         token_budget=args.token_budget, tbt_slo=args.tbt_slo,
         paged=args.paged, page_size=args.page_size,
         kv_pool_tokens=args.kv_pool_tokens,
+        prefix_cache=prefix_cache,
         temperature=args.temperature)
 
     if args.stream:
@@ -138,6 +180,10 @@ def main(argv=None):
                                   "reason": ev.reason,
                                   "n_tokens": ev.n_tokens,
                                   "t": round(ev.t, 6)}))
+        if args.paged:
+            # stream consumers get the cache outcome as a JSONL event too
+            print(json.dumps({"event": "prefix_cache",
+                              **engine.kv_mgr.prefix_stats()}))
         metrics = engine.run()   # drained: collects metrics only
         out = metrics.summary()
         out["dispatch_stats"] = dataclasses.asdict(engine.dstats)
@@ -148,6 +194,8 @@ def main(argv=None):
         out = metrics.summary()
     out["duet_fraction"] = engine.mux.stats.duet_fraction
     out["iterations"] = engine.mux.stats.iterations
+    if args.paged:
+        out["prefix_cache"] = engine.kv_mgr.prefix_stats()
     print(json.dumps(out, indent=2))
 
 

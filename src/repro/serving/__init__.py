@@ -1,6 +1,7 @@
 from repro.serving.request import Phase, Request, ServingMetrics
 from repro.serving.traces import TRACES, synth_trace, synthetic_fixed
 from repro.serving.kvcache import (PagedKVCacheManager, PagePoolConfig,
+                                   PrefixCacheStats, copy_pool_pages,
                                    gather_kv, init_page_pools, write_kv_page)
 from repro.serving.scheduler import (ChunkedPrefillPolicy, DuetPolicy,
                                      IterationPlan, PrefillFirstPolicy,
@@ -17,7 +18,8 @@ from repro.serving.async_engine import (AsyncDuetEngine, DispatchStats,
 __all__ = [
     "AsyncDuetEngine", "DispatchStats", "FinishEvent", "TokenEvent",
     "Phase", "Request", "ServingMetrics", "TRACES", "synth_trace",
-    "synthetic_fixed", "PagedKVCacheManager", "PagePoolConfig", "gather_kv",
+    "synthetic_fixed", "PagedKVCacheManager", "PagePoolConfig",
+    "PrefixCacheStats", "copy_pool_pages", "gather_kv",
     "init_page_pools", "write_kv_page", "ChunkedPrefillPolicy", "DuetPolicy",
     "IterationPlan", "PrefillFirstPolicy", "QueueState", "ClusterSim",
     "DisaggSim", "InstanceSim", "SimConfig", "kv_bytes_per_token",

@@ -51,6 +51,7 @@ from repro.core.lookahead import make_superiter_fn
 from repro.core.roofline import HardwareSpec, TPU_V5E
 from repro.models.transformer import Model
 from repro.serving.engine import DuetEngine, EngineConfig
+from repro.serving.kvcache import copy_pool_pages
 from repro.serving.request import Phase, Request, ServingMetrics
 from repro.serving.scheduler import IterationPlan
 
@@ -230,13 +231,8 @@ class AsyncDuetEngine(DuetEngine):
         while True:
             self._ingest()
             self.state.admit_arrivals(self._pending, self.now)
-            for r in list(self.state.waiting):
-                if not self._admissible(r):
-                    self.state.waiting.remove(r)
-                    self._reject(r, "kv_footprint_exceeds_capacity")
-                    yield self._finish_event(r)
-                elif r.slot is None and self.free_slots:
-                    r.slot = self.free_slots.pop()
+            for r in self._admit_waiting():
+                yield self._finish_event(r)
             plan = self._plan()
             if not plan.is_idle:
                 yield from self._step(plan)
@@ -279,6 +275,7 @@ class AsyncDuetEngine(DuetEngine):
 
         kb, ran = (self._plan_decode_batch(plan.decode, k)
                    if plan.decode else (0, []))
+        self._privatize_decode_pages(ran)
         dec_items = [_DecItem(r, r.slot) for r in ran]
         for r in ran:
             self.kv_mgr.commit_tokens(r.rid, kb)
@@ -305,6 +302,12 @@ class AsyncDuetEngine(DuetEngine):
                 continue   # preempted earlier in this iteration
             if not self._ensure_pages(r, chunk):
                 continue   # deferred: decode completions free pages
+            if self.paged:
+                # privatise a shared first page (CoW) before the chunk's
+                # program writes into it — device copy, no host sync
+                self.pools = copy_pool_pages(
+                    self.pools,
+                    self.kv_mgr.ensure_writable(r.rid, r.prefilled))
             self.kv_mgr.allocate(r.rid, chunk)
             start = r.prefilled
             toks_np = r.prefill_token_ids()[start:start + chunk]
@@ -313,12 +316,15 @@ class AsyncDuetEngine(DuetEngine):
             assert len(toks_np) == chunk, \
                 "prefill chunk dispatched with stale host token values"
             r.prefilled += chunk
+            r.prefill_executed += chunk
             if r.remaining_prompt > 0:
                 status = "continue"
             elif r.resume_len:
                 status = "resumed"
             else:
                 status = "first"
+            if status != "continue" and self.paged and self.ec.prefix_cache:
+                self.kv_mgr.insert_prefix(r.rid, r.prefill_token_ids())
             # snapshot the chunk's block table before any retire below can
             # free the pages (an output_len==1 request finishes here)
             if self.paged:

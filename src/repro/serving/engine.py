@@ -40,8 +40,10 @@ from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import HardwareSpec, TPU_V5E
 from repro.models.transformer import Model
 from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, PagedKVCacheManager,
-                                   PagePoolConfig, init_page_pools)
-from repro.serving.request import Phase, Request, ServingMetrics
+                                   PagePoolConfig, copy_pool_pages,
+                                   init_page_pools)
+from repro.serving.request import (Phase, Request, ServingMetrics,
+                                   synth_prompt_tokens)
 from repro.serving.scheduler import DuetPolicy, IterationPlan, QueueState
 
 K_BUCKETS = (1, 2, 4, 8, 16, 32)
@@ -71,6 +73,10 @@ class EngineConfig:
     # modes are capacity-equivalent out of the box.
     paged: bool = True
     kv_pool_tokens: Optional[int] = None
+    # copy-on-write prefix caching over the paged pool (ignored in slab
+    # mode). Requests sharing a prompt prefix map the cached pages
+    # read-only and prefill only the uncached suffix.
+    prefix_cache: bool = True
 
 
 class DuetEngine:
@@ -90,7 +96,8 @@ class DuetEngine:
                 or engine_cfg.max_slots * engine_cfg.max_len
             num_pages = -(-pool_tokens // ps) + 1   # +1: reserved null page
             self.kv_mgr = PagedKVCacheManager(
-                PagePoolConfig(num_pages=num_pages, page_size=ps))
+                PagePoolConfig(num_pages=num_pages, page_size=ps),
+                prefix_cache=engine_cfg.prefix_cache)
             # block-table width: one request may span the whole pool
             self.max_pages = num_pages - 1
             self.pools = init_page_pools(self.cfg, self.kv_mgr.pool)
@@ -160,8 +167,8 @@ class DuetEngine:
         """Deterministic rid-derived prompt tokens for trace requests that
         carry lengths only (shared with the async engine)."""
         if r.prompt_tokens is None:
-            r.prompt_tokens = np.random.default_rng(r.rid).integers(
-                0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
+            r.prompt_tokens = synth_prompt_tokens(
+                r.rid, self.cfg.vocab_size, r.prompt_len)
 
     def submit(self, requests: List[Request]):
         for r in requests:
@@ -169,6 +176,38 @@ class DuetEngine:
         self._pending = sorted(requests, key=lambda r: r.arrival)
 
     # --------------------------------------------------- admission / eviction
+    def _admit_waiting(self) -> List[Request]:
+        """Slot admission, FCFS. A request whose footprint can never fit is
+        rejected with a recorded outcome — never silently dropped. Newly
+        slotted requests take a prefix-cache lock so scheduling, admission
+        and the roofline all see the reduced (uncached-suffix) prefill.
+        Returns the rejected requests (the async engine emits events)."""
+        rejected = []
+        for r in list(self.state.waiting):
+            if not self._admissible(r):
+                self.state.waiting.remove(r)
+                self._reject(r, "kv_footprint_exceeds_capacity")
+                rejected.append(r)
+            elif r.slot is None and self.free_slots:
+                r.slot = self.free_slots.pop()
+                self._try_prefix_lock(r)
+        return rejected
+
+    def _try_prefix_lock(self, r: Request):
+        """Start ``r`` at its longest cached prefix: matched pages map
+        read-only into its block table and ``prefilled`` jumps to the
+        matched length, so only the uncached suffix is scheduled. Also
+        covers preemption-recompute — a victim whose prompt pages are still
+        cached resumes from them instead of replaying the full prefill."""
+        if not (self.paged and self.ec.prefix_cache):
+            return
+        if r.prefilled or self.kv_mgr.page_table(r.rid):
+            return
+        matched = self.kv_mgr.lock_prefix(r.rid, r.prefill_token_ids())
+        if matched:
+            r.prefilled = matched
+            r.cached_prompt += matched
+
     def _admissible(self, r: Request) -> bool:
         """Can this request's full KV footprint ever fit the engine?"""
         if self.paged:
@@ -206,18 +245,24 @@ class DuetEngine:
         self.state.waiting.insert(0, r)
 
     def _ensure_pages(self, r: Request, new_tokens: int) -> bool:
-        """Make room for a prefill chunk. Only other in-flight prefills are
-        evicted (latest arrival first — LIFO keeps FCFS fairness); decode
-        requests are never sacrificed for prefill progress. If that is not
-        enough the chunk is deferred: decode completions free pages."""
-        if self.kv_mgr.can_allocate(r.rid, new_tokens):
+        """Make room for a prefill chunk (including a potential CoW copy of
+        a shared first page). Only other in-flight prefills are evicted
+        (latest arrival first — LIFO keeps FCFS fairness); decode requests
+        are never sacrificed for prefill progress. If that is not enough the
+        chunk is deferred: decode completions free pages."""
+        def fits() -> bool:
+            need = self.kv_mgr.pages_needed(r.rid, new_tokens) \
+                + self.kv_mgr.cow_pages_needed(r.rid, r.prefilled)
+            return need <= self.kv_mgr.free_pages
+
+        if fits():
             return True
         pre = sorted((x for x in self.state.prefilling
                       if x is not r and self.kv_mgr.page_table(x.rid)),
                      key=lambda x: x.arrival, reverse=True)
         for victim in pre:
             self._preempt(victim)
-            if self.kv_mgr.can_allocate(r.rid, new_tokens):
+            if fits():
                 return True
         return False
 
@@ -229,6 +274,11 @@ class DuetEngine:
         preemption), or "deferred" (no pages and nothing to preempt)."""
         if not self._ensure_pages(r, chunk):
             return "deferred"
+        if self.paged:
+            # the chunk's first write may land in a shared/cached page
+            # (fully page-aligned prefix hit): privatise it first
+            self.pools = copy_pool_pages(
+                self.pools, self.kv_mgr.ensure_writable(r.rid, r.prefilled))
         self.kv_mgr.allocate(r.rid, chunk)
         toks = jnp.asarray(
             r.prefill_token_ids()[r.prefilled:r.prefilled + chunk])[None, :]
@@ -245,8 +295,11 @@ class DuetEngine:
                                            jnp.int32(r.prefilled))
         self._write_cache(r.slot, sub)
         r.prefilled += chunk
+        r.prefill_executed += chunk
         if r.remaining_prompt > 0:
             return "continue"
+        if self.paged and self.ec.prefix_cache:
+            self.kv_mgr.insert_prefix(r.rid, r.prefill_token_ids())
         self.slot_pos[r.slot] = r.prefill_total
         if r.resume_len:
             self.slot_last_token[r.slot] = r.output_tokens[-1]
@@ -298,6 +351,20 @@ class DuetEngine:
             self._preempt(victim)
         return kb, reqs
 
+    def _privatize_decode_pages(self, reqs: List[Request]):
+        """CoW guard for the decode append: only the page holding the next
+        write position can be shared (look-ahead pages are fresh). With
+        page-granular prefix matching the suffix page is private by
+        construction, so this is normally a no-op — it exists so any future
+        sub-page sharing (e.g. fork) cannot corrupt cached pages."""
+        if not self.paged:
+            return
+        for r in reqs:
+            self.pools = copy_pool_pages(
+                self.pools,
+                self.kv_mgr.ensure_writable(r.rid,
+                                            self.kv_mgr.length(r.rid)))
+
     def _decode_args(self, dec_reqs: List[Request], kb: int):
         """Decode-dispatch inputs (active mask, block tables, width bucket)
         for the current batch. Must be called while every batch member
@@ -324,6 +391,7 @@ class DuetEngine:
         kb, reqs = self._plan_decode_batch(decode_reqs, k)
         if not reqs:
             return 0, []
+        self._privatize_decode_pages(reqs)
         active, tbl, _ = self._decode_args(reqs, kb)
         first = jnp.asarray(self.slot_last_token)[:, None]
         pos = jnp.asarray(self.slot_pos)
@@ -353,14 +421,7 @@ class DuetEngine:
         while pending or self.state.waiting or self.state.running \
                 or self.state.prefilling:
             self.state.admit_arrivals(pending, self.now)
-            # slot admission, FCFS. A request whose footprint can never fit
-            # is rejected with a recorded outcome — never silently dropped.
-            for r in list(self.state.waiting):
-                if not self._admissible(r):
-                    self.state.waiting.remove(r)
-                    self._reject(r, "kv_footprint_exceeds_capacity")
-                elif r.slot is None and self.free_slots:
-                    r.slot = self.free_slots.pop()
+            self._admit_waiting()
             # slot-less requests stay queued in `waiting`; _plan() exposes
             # only slot-holders to the policy, the rest wait FCFS.
             plan = self._plan()

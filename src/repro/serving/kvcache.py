@@ -5,14 +5,24 @@ accounting, and the look-ahead reservation API the interruption-free engine
 needs (§4.3: KV slots for k future decode steps are preallocated so the
 k-step fused decode program never synchronises with the host).
 
+Copy-on-write prefix caching (``prefix_cache=True``): full pages are indexed
+by a chained token-block hash so a new request whose prompt shares a prefix
+with an earlier one maps the shared pages read-only into its block table
+(``lock_prefix``) instead of recomputing the prefill. Pages carry refcounts;
+a write into a shared or indexed page goes through ``ensure_writable`` which
+swaps in a private copy (CoW). Pages of retired requests stay cached while
+unreferenced and are evicted LRU-first only under pool pressure — eviction
+is transparent to admission (``free_pages`` counts them as reclaimable).
+
 Device side: per-layer page pools ``(num_pages, page_size, Hkv, Dh)``. The
 jnp reference read/write path lives here; the Pallas paged-decode kernel
 (``repro.kernels.paged_decode``) consumes the same layout.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,29 +43,82 @@ class PagePoolConfig:
     page_size: int = DEFAULT_PAGE_SIZE
 
 
+@dataclass
+class PrefixCacheStats:
+    lookups: int = 0             # lock_prefix calls against the index
+    lookup_tokens: int = 0       # prompt tokens those lookups covered
+    hit_requests: int = 0        # lookups that matched >= 1 page
+    hit_tokens: int = 0          # prompt tokens served from cached pages
+    cow_copies: int = 0          # shared pages privatised before a write
+    evictions: int = 0           # cached pages reclaimed under pressure
+    pages_allocated: int = 0     # fresh pages handed out (excl. CoW copies)
+
+    @property
+    def hit_rate(self) -> float:
+        """Token-level hit rate over all prefix lookups."""
+        return self.hit_tokens / max(1, self.lookup_tokens)
+
+
 class PagedKVCacheManager:
     """Host-side allocator. Pages are identified by int indices into the
     device pools; page 0 is reserved as the null page (padding in block
-    tables), matching common paged-attention implementations."""
+    tables), matching common paged-attention implementations.
 
-    def __init__(self, pool: PagePoolConfig):
+    With ``prefix_cache=True`` the manager additionally keeps per-page
+    refcounts, a chained block-hash index over full pages, and an LRU of
+    unreferenced cached pages. Shared pages are read-only: the engine must
+    route any write that lands in an existing page through
+    :meth:`ensure_writable` and apply the returned (src, dst) device copies
+    before dispatching the program that writes."""
+
+    def __init__(self, pool: PagePoolConfig, *, prefix_cache: bool = False):
         self.pool = pool
         self.page_size = pool.page_size
+        self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(pool.num_pages - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
+        # prefix-cache state (empty and inert when prefix_cache=False)
+        self._ref: Dict[int, int] = {}              # page -> live refcount
+        self._page_hash: Dict[int, tuple] = {}      # page -> chain key
+        self._hash_index: Dict[tuple, int] = {}     # chain key -> page
+        self._lru: "OrderedDict[int, None]" = OrderedDict()  # ref==0, cached
+        self.stats = PrefixCacheStats()
 
     # ------------------------------------------------------------- queries
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages available to new allocations. Unreferenced cached pages
+        count as free — eviction is transparent to admission."""
+        return len(self._free) + len(self._lru)
 
     @property
     def used_pages(self) -> int:
-        return (self.pool.num_pages - 1) - len(self._free)
+        """Pages actively referenced by at least one request."""
+        return (self.pool.num_pages - 1) - self.free_pages
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages retained in the hash index (referenced or evictable)."""
+        return len(self._page_hash)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages mapped into more than one request's block table."""
+        return sum(1 for c in self._ref.values() if c > 1)
 
     def utilization(self) -> float:
         return self.used_pages / max(1, self.pool.num_pages - 1)
+
+    def prefix_stats(self) -> dict:
+        d = {k: getattr(self.stats, k)
+             for k in ("lookups", "lookup_tokens", "hit_requests",
+                       "hit_tokens", "cow_copies", "evictions",
+                       "pages_allocated")}
+        d["hit_rate"] = self.stats.hit_rate
+        d["cached_pages"] = self.cached_pages
+        d["shared_pages"] = self.shared_pages
+        return d
 
     def pages_needed(self, rid: int, new_tokens: int) -> int:
         cur = self._lengths.get(rid, 0)
@@ -72,6 +135,31 @@ class PagedKVCacheManager:
         return need <= self.free_pages
 
     # ---------------------------------------------------------- allocation
+    def _take_page(self) -> int:
+        """Pop a fresh page, evicting the LRU cached page if the free list
+        is empty. Raises MemoryError when the pool is truly out."""
+        if self._free:
+            return self._free.pop()
+        if self._lru:
+            page, _ = self._lru.popitem(last=False)
+            key = self._page_hash.pop(page)
+            del self._hash_index[key]
+            self.stats.evictions += 1
+            return page
+        raise MemoryError("KV pool exhausted")
+
+    def _release_page(self, page: int):
+        """Drop one reference; an unreferenced page returns to the free
+        list, or — when it backs a cached prefix block — to the LRU."""
+        self._ref[page] = self._ref.get(page, 1) - 1
+        if self._ref[page] > 0:
+            return
+        del self._ref[page]
+        if page in self._page_hash:
+            self._lru[page] = None
+        else:
+            self._free.append(page)
+
     def allocate(self, rid: int, new_tokens: int) -> List[int]:
         """Extend `rid`'s table to cover `new_tokens` more tokens. Returns
         the newly assigned pages. Raises MemoryError when the pool is out."""
@@ -80,7 +168,10 @@ class PagedKVCacheManager:
             raise MemoryError(
                 f"KV pool exhausted: need {need}, free {self.free_pages}")
         tbl = self._tables.setdefault(rid, [])
-        new = [self._free.pop() for _ in range(need)]
+        new = [self._take_page() for _ in range(need)]
+        for p in new:
+            self._ref[p] = 1
+        self.stats.pages_allocated += need
         tbl.extend(new)
         self._lengths[rid] = self._lengths.get(rid, 0) + new_tokens
         return new
@@ -110,8 +201,108 @@ class PagedKVCacheManager:
 
     def free(self, rid: int):
         for p in self._tables.pop(rid, []):
-            self._free.append(p)
+            self._release_page(p)
         self._lengths.pop(rid, None)
+
+    # ------------------------------------------------------ prefix caching
+    def _block_keys(self, token_ids) -> List[tuple]:
+        """Chained hash keys, one per *full* page of ``token_ids`` — key i
+        commits to every token in blocks 0..i, so a match at block i implies
+        the whole prefix matches."""
+        ids = np.asarray(token_ids)
+        keys, prev = [], ()
+        for i in range(len(ids) // self.page_size):
+            blk = tuple(int(t) for t in
+                        ids[i * self.page_size:(i + 1) * self.page_size])
+            prev = (hash((prev, blk)), blk)
+            keys.append(prev)
+        return keys
+
+    def match_prefix(self, token_ids) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``token_ids`` at page granularity.
+        Returns (matched_tokens, pages); does not take references."""
+        pages: List[int] = []
+        for key in self._block_keys(token_ids):
+            page = self._hash_index.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return len(pages) * self.page_size, pages
+
+    def lock_prefix(self, rid: int, token_ids) -> int:
+        """Map the longest cached prefix of ``token_ids`` read-only into
+        ``rid``'s (empty) block table, taking one reference per page.
+        Returns the number of prompt tokens covered — capped at
+        ``len(token_ids) - 1`` so at least one suffix token is recomputed
+        (its logits are needed to sample the first output; when the whole
+        page-aligned prompt is cached the final write triggers CoW)."""
+        if not self.prefix_cache or self._tables.get(rid):
+            return 0
+        self.stats.lookups += 1
+        self.stats.lookup_tokens += len(token_ids)
+        n, pages = self.match_prefix(token_ids)
+        matched = min(n, len(token_ids) - 1)
+        if matched <= 0:
+            return 0
+        for p in pages:
+            if p in self._lru:
+                del self._lru[p]
+            self._ref[p] = self._ref.get(p, 0) + 1
+        self._tables[rid] = list(pages)
+        self._lengths[rid] = matched
+        self.stats.hit_requests += 1
+        self.stats.hit_tokens += matched
+        return matched
+
+    def insert_prefix(self, rid: int, token_ids):
+        """Index ``rid``'s full pages under their block hashes (called once
+        the content is final, i.e. at prefill completion). First writer
+        wins: a block already indexed by another page is left alone — the
+        duplicate pages stay private and die with their request."""
+        if not self.prefix_cache:
+            return
+        tbl = self._tables.get(rid, [])
+        for i, key in enumerate(self._block_keys(token_ids)):
+            if i >= len(tbl) or key in self._hash_index:
+                continue
+            page = tbl[i]
+            if page in self._page_hash:      # already indexed (matched page)
+                continue
+            self._page_hash[page] = key
+            self._hash_index[key] = page
+
+    def cow_pages_needed(self, rid: int, pos: int) -> int:
+        """Extra pages a write starting at token ``pos`` would consume for
+        copy-on-write (0 or 1 — only the first touched page can be shared;
+        later pages are freshly allocated)."""
+        return 1 if self._cow_target(rid, pos) is not None else 0
+
+    def _cow_target(self, rid: int, pos: int) -> Optional[int]:
+        tbl = self._tables.get(rid, ())
+        idx = pos // self.page_size
+        if idx >= len(tbl):
+            return None
+        page = tbl[idx]
+        if self._ref.get(page, 1) > 1 or page in self._page_hash:
+            return idx
+        return None
+
+    def ensure_writable(self, rid: int, pos: int) -> List[Tuple[int, int]]:
+        """Privatise the page a write at token position ``pos`` would land
+        in, when that page is shared (ref > 1) or indexed by the prefix
+        cache. Returns device copies to apply as (src_page, dst_page) —
+        the caller must execute them on the pools *before* the write."""
+        idx = self._cow_target(rid, pos)
+        if idx is None:
+            return []
+        tbl = self._tables[rid]
+        old = tbl[idx]
+        new = self._take_page()
+        self._ref[new] = 1
+        tbl[idx] = new
+        self._release_page(old)
+        self.stats.cow_copies += 1
+        return [(old, new)]
 
     def page_table(self, rid: int) -> List[int]:
         return list(self._tables.get(rid, []))
@@ -148,6 +339,24 @@ def init_page_pools(cfg: ArchConfig, pool: PagePoolConfig,
         else:
             pools.append(None)
     return pools
+
+
+def copy_pool_pages(pools, copies: List[Tuple[int, int]]):
+    """Apply CoW page copies (src, dst) to every attention layer's pools.
+    Host-triggered device ops only — no blocking reads, so the async engine
+    can enqueue them between dispatches."""
+    if not copies:
+        return pools
+    src = jnp.asarray([s for s, _ in copies])
+    dst = jnp.asarray([d for _, d in copies])
+    out = []
+    for p in pools:
+        if p is None:
+            out.append(None)
+        else:
+            k, v = p
+            out.append((k.at[dst].set(k[src]), v.at[dst].set(v[src])))
+    return out
 
 
 def write_kv_page(pages: jax.Array, kv: jax.Array, page_ids: jax.Array,

@@ -8,6 +8,15 @@ from typing import List, Optional
 import numpy as np
 
 
+def synth_prompt_tokens(rid: int, vocab_size: int, n: int) -> np.ndarray:
+    """Deterministic rid-derived prompt tokens for trace requests that carry
+    lengths only. Single source of the seeding convention: the engines'
+    prompt materialization and the serve CLI's shared-prefix builder must
+    derive identical bodies."""
+    return np.random.default_rng(rid).integers(0, vocab_size, n) \
+        .astype(np.int32)
+
+
 class Phase(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"
@@ -27,6 +36,14 @@ class Request:
     phase: Phase = Phase.WAITING
     prefilled: int = 0           # prompt tokens already prefilled
     generated: int = 0           # output tokens produced
+    # prefix cache: tokens served from shared cached pages instead of being
+    # recomputed. The real engine writes it when a prefix lock succeeds; a
+    # simulator trace may preset it to model a known hit (the policy then
+    # starts the prefill at the cached length). ``prefill_executed`` counts
+    # the prompt tokens actually run through the model — monotone across
+    # preemptions, so executed vs cached accounting survives recompute.
+    cached_prompt: int = 0
+    prefill_executed: int = 0
     slot: Optional[int] = None   # engine batch slot (real engine only)
     prompt_tokens: Optional[np.ndarray] = None   # real engine: token ids
     output_tokens: List[int] = field(default_factory=list)
@@ -116,6 +133,10 @@ class ServingMetrics:
             "num_rejected": sum(1 for r in self.requests
                                 if r.phase == Phase.REJECTED),
             "num_preemptions": sum(r.preemptions for r in self.requests),
+            "prefill_tokens_executed": sum(r.prefill_executed
+                                           for r in self.requests),
+            "prefill_tokens_cached": sum(r.cached_prompt
+                                         for r in self.requests),
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
             "p99_ttft_s": _pct(ttfts, 0.99),
             "mean_tbt_s": sum(tbts) / len(tbts) if tbts else float("nan"),

@@ -139,6 +139,14 @@ class BasePolicy:
                 break
             state.waiting.pop(0)
             r.phase = Phase.PREFILL
+            # simulated requests (no token ids) may carry a preset
+            # ``cached_prompt`` annotation: start the prefill at the cached
+            # length, keeping one suffix token to recompute — the same
+            # reduced RequestLoad(q=suffix, c=full_context) the real
+            # engine's prefix lock produces.
+            if r.cached_prompt and not r.prefilled \
+                    and r.prompt_tokens is None:
+                r.prefilled = min(r.cached_prompt, r.prompt_len - 1)
             state.prefilling.append(r)
             chunk = min(budget, r.remaining_prompt)
             chunks.append((r, chunk))
@@ -203,9 +211,18 @@ class DuetPolicy(BasePolicy):
             return ScheduleDecision(mode="aggregated", t_mixed=t_mixed)
         t_d = model.iteration_latency(dec_loads, units=s_d)
         t_p = model.iteration_latency(pre_loads, units=s_p)
-        k = max(1, min(64, int(t_p / max(t_d, 1e-9))))
-        tput = (k * len(dec_loads) + sum(r.q for r in pre_loads)) \
-            / max(k * t_d, t_p)
+        # Algorithm 1 (and optimize_partition) evaluates BOTH k_base and
+        # k_base+1 — the +1 candidate wins whenever the extra decode tokens
+        # outweigh stretching the span past t_p.
+        k_base = int(t_p / max(t_d, 1e-9))
+        pre_tokens = sum(r.q for r in pre_loads)
+        k, tput = 1, -1.0
+        cands = sorted({max(1, min(64, k_base)), max(1, min(64, k_base + 1))})
+        for cand in cands:
+            rho = (cand * len(dec_loads) + pre_tokens) \
+                / max(cand * t_d, t_p)
+            if rho > tput:
+                k, tput = cand, rho
         return ScheduleDecision(mode="duet", t_mixed=t_mixed,
                                 partition=PartitionConfig(
                                     s_prefill=s_p, s_decode=s_d, k=k,

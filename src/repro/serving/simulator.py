@@ -171,6 +171,7 @@ class InstanceSim:
     def _advance_prefill(self, plan: IterationPlan, ts: float):
         for r, chunk in plan.prefill:
             r.prefilled += chunk
+            r.prefill_executed += chunk
             if r.remaining_prompt <= 0:
                 # prompt fully processed -> first token sampled this iteration
                 self.state.prefilling.remove(r)

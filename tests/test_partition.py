@@ -28,7 +28,9 @@ def test_partition_matches_bruteforce():
     pre, dec = _workload()
     tbt = 0.03
     best = optimize_partition(m, pre, dec, total_units=8, tbt_slo=tbt)
-    # exhaustive check over every (s_d, k) pair
+    # exhaustive check over every feasible (s_d, k) pair — feasibility
+    # includes the §4.2 cross-iteration gap constraint the optimizer
+    # enforces: t_d + max(0, t_p - k*t_d) <= tbt
     t_pre_tok = sum(r.q for r in pre)
     t_dec_tok = sum(r.q for r in dec)
     brute = 0.0
@@ -38,6 +40,8 @@ def test_partition_matches_bruteforce():
             continue
         tp = m.iteration_latency(pre, units=8 - sd)
         for k in range(1, 65):
+            if td + max(0.0, tp - k * td) > tbt:
+                continue
             rho = (k * t_dec_tok + t_pre_tok) / max(k * td, tp)
             brute = max(brute, rho)
     # optimizer only tries k in {floor(tp/td), +1} (paper) — it must be
@@ -72,6 +76,50 @@ def test_optimizer_prefers_minimal_decode_units():
     min_sd = next(sd for sd in range(1, 16)
                   if m.iteration_latency(dec, units=sd) <= 0.05)
     assert part.s_decode <= min_sd + 2
+
+
+class _ScriptedModel:
+    """Latency oracle with scripted per-phase values: decode-only batches
+    cost ``t_dec``, anything containing prefill costs ``t_pre`` —
+    independent of units, so the (S_d, k) choice is fully determined."""
+
+    def __init__(self, t_dec, t_pre):
+        self.t_dec, self.t_pre = t_dec, t_pre
+
+    def iteration_latency(self, reqs, units=None):
+        if all(r.phase == "decode" for r in reqs):
+            return self.t_dec
+        return self.t_pre
+
+
+def test_k_choice_respects_cross_iteration_gap():
+    """Regression for the dead k-loop branch (re-checking t_d > slo): with
+    t_d = 0.09, t_p = 0.153, slo = 0.1, k_base = 1 has the higher raw
+    throughput (110/0.153 > 120/0.18) but leaves a 0.153 s gap between the
+    last decode token and the next iteration's first — a TBT violation the
+    old code never checked. The fixed optimizer must pin k = 2 (gap = t_d)."""
+    m = _ScriptedModel(t_dec=0.09, t_pre=0.153)
+    pre = [RequestLoad(q=100, c=0, phase="prefill")]
+    dec = [RequestLoad(q=1, c=64) for _ in range(10)]
+    part = optimize_partition(m, pre, dec, total_units=2, tbt_slo=0.1)
+    assert part is not None
+    assert (part.s_decode, part.k) == (1, 2)
+    # pinned objective of the surviving candidate: (2*10 + 100) / (2*0.09)
+    assert part.throughput == pytest.approx(120 / 0.18)
+    # and the boundary gap of the chosen config meets the SLO
+    assert part.t_decode + max(0.0, part.t_prefill
+                               - part.k * part.t_decode) <= 0.1
+
+
+def test_max_k_clamp_cannot_mask_decode_starvation():
+    """When t_p/t_d exceeds max_k even k = max_k leaves the decode stream
+    starved past the SLO; the optimizer must return None (aggregated
+    fallback) instead of the old behaviour of accepting the clamped k."""
+    m = _ScriptedModel(t_dec=0.05, t_pre=10.0)   # t_p/t_d = 200 > max_k
+    pre = [RequestLoad(q=100, c=0, phase="prefill")]
+    dec = [RequestLoad(q=1, c=64) for _ in range(10)]
+    assert optimize_partition(m, pre, dec, total_units=2,
+                              tbt_slo=0.1) is None
 
 
 def test_infeasible_returns_none():

@@ -1,8 +1,11 @@
 """Scheduler policy tests: budget filling, decode priority, duet trigger."""
+from types import SimpleNamespace
+
 import pytest
 
 from repro.configs import get_config
 from repro.core.multiplexer import AdaptiveMultiplexer
+from repro.core.roofline import TPU_V5E, RequestLoad, RooflineModel
 from repro.serving.request import Phase, Request
 from repro.serving.scheduler import (ChunkedPrefillPolicy, DuetPolicy,
                                      PrefillFirstPolicy, QueueState)
@@ -85,6 +88,86 @@ def test_duet_policy_triggers_on_contention():
     assert plan.mode == "duet"
     assert plan.k >= 1
     assert plan.decision.partition.t_decode <= 0.02
+
+
+class _ScriptedModel:
+    """Scripted latency oracle: decode-only batches cost t_dec, anything
+    containing a prefill costs t_pre, independent of units."""
+
+    def __init__(self, t_dec, t_pre):
+        self.t_dec, self.t_pre = t_dec, t_pre
+
+    def iteration_latency(self, reqs, units=None):
+        if all(r.phase == "decode" for r in reqs):
+            return self.t_dec
+        return self.t_pre
+
+
+def test_static_partition_evaluates_both_k_candidates():
+    """Algorithm 1 tries k_base and k_base+1; the static ablation path used
+    to hardcode k_base. With t_p/t_d = 2.5 and a decode-heavy batch the +1
+    candidate wins: rho(2) = 210/0.025 < rho(3) = 310/0.03."""
+    mux = SimpleNamespace(model=_ScriptedModel(t_dec=0.01, t_pre=0.025),
+                          total_units=2, granularity=64)
+    pol = DuetPolicy(mux, static_partition=(1, 1))
+    pre = [RequestLoad(q=10, c=0, phase="prefill")]
+    dec = [RequestLoad(q=1, c=64) for _ in range(100)]
+    d = pol._static_decision(pre, dec)
+    assert d.mode == "duet"
+    assert d.partition.k == 3            # k_base + 1, not k_base = 2
+    assert d.partition.throughput == pytest.approx(310 / 0.03)
+
+
+def test_static_partition_keeps_k_base_when_better():
+    """Prefill-heavy counterpart: stretching the span past t_p costs more
+    than one extra decode round earns, so k_base must win."""
+    mux = SimpleNamespace(model=_ScriptedModel(t_dec=0.01, t_pre=0.025),
+                          total_units=2, granularity=64)
+    pol = DuetPolicy(mux, static_partition=(1, 1))
+    pre = [RequestLoad(q=1000, c=0, phase="prefill")]
+    dec = [RequestLoad(q=1, c=64) for _ in range(2)]
+    d = pol._static_decision(pre, dec)
+    assert d.partition.k == 2            # rho(2) = 1004/0.025 > rho(3)
+
+
+def test_profiled_tables_drive_the_roofline():
+    """The Π(S)/B(S) tables are live: measured curves passed at construction
+    change every latency estimate, and the analytic default reproduces the
+    hardware spec exactly (integer units)."""
+    loads = [RequestLoad(q=1, c=4096) for _ in range(32)]
+    mux = AdaptiveMultiplexer(CFG, total_units=8, tbt_slo=0.02, tp=1)
+    ref = RooflineModel(CFG, TPU_V5E, tp=1)
+    assert mux.predict_mixed(loads) == pytest.approx(
+        ref.iteration_latency(loads, units=8))
+    # a 2x-faster profiled machine halves the prediction (tp=1: no comms)
+    fast = AdaptiveMultiplexer(
+        CFG, total_units=8, tbt_slo=0.02, tp=1,
+        pi_table={u: 2 * TPU_V5E.pi(u) for u in range(1, 9)},
+        bw_table={u: 2 * TPU_V5E.bw(u) for u in range(1, 9)})
+    assert fast.predict_mixed(loads) == pytest.approx(
+        mux.predict_mixed(loads) / 2)
+    # and the partition optimizer consults them too
+    pre = [RequestLoad(q=8192, c=0, phase="prefill")]
+    slow_d = mux.step(pre, loads)
+    fast_d = fast.step(pre, loads)
+    if slow_d.partition and fast_d.partition:
+        assert fast_d.partition.t_decode == pytest.approx(
+            slow_d.partition.t_decode / 2)
+
+
+def test_simulated_prefix_hit_reduces_scheduled_prefill():
+    """A request annotated with cached_prompt (simulator: known prefix-cache
+    hit) is scheduled with q = uncached suffix and c = full context."""
+    pol = ChunkedPrefillPolicy(token_budget=500, max_batch=8)
+    st = QueueState()
+    r = _req(1, 400)
+    r.cached_prompt = 256
+    st.waiting = [r]
+    plan = pol.schedule(st)
+    req, chunk = plan.prefill[0]
+    assert req.prefilled == 256 and chunk == 144
+    pre, _ = plan.loads()
+    assert pre[0].q == 144 and pre[0].c == 256
 
 
 def test_duet_policy_stays_aggregated_when_light():
