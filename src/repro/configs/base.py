@@ -24,6 +24,13 @@ from typing import Optional, Tuple
 
 VOCAB_PAD_MULTIPLE = 256  # embedding tables padded so `model`-axis sharding divides
 
+# Single source of truth for how block kinds store sequence state: attention
+# kinds keep it in the KV cache (paged pools); recurrent kinds carry O(1)
+# per-slot state that must process every token. Every allowlist downstream
+# (model assembly, page-pool shapes, prefix-cache gating) derives from these.
+ATTENTION_KINDS = ("attn", "attn_moe", "shared_attn", "mla", "mla_moe")
+RECURRENT_KINDS = ("mamba2", "slstm", "mlstm")
+
 
 @dataclass(frozen=True)
 class ArchConfig:
@@ -117,13 +124,20 @@ class ArchConfig:
 
     @property
     def has_attention(self) -> bool:
-        return any(b in ("attn", "attn_moe", "mla", "mla_moe", "shared_attn")
-                   for b in self.block_pattern)
+        return any(b in ATTENTION_KINDS for b in self.block_pattern)
 
     @property
     def is_recurrent(self) -> bool:
         """True when decode state is O(1) in context length (SSM / xLSTM)."""
-        return all(b in ("mamba2", "slstm", "mlstm") for b in self.block_pattern)
+        return all(b in RECURRENT_KINDS for b in self.block_pattern)
+
+    @property
+    def attention_only(self) -> bool:
+        """True when every block's sequence state lives in the KV cache.
+        Recurrent blocks carry per-slot state that must observe every
+        prompt token, so features that skip prefill work for cached
+        context (prefix caching) are only sound when this holds."""
+        return all(b in ATTENTION_KINDS for b in self.block_pattern)
 
     @property
     def d_inner(self) -> int:

@@ -50,6 +50,20 @@ class TabulatedPartitionCurves:
         self._base = base
         self._pi = dict(pi_table)
         self._bw = dict(bw_table)
+        # both tables must cover the same contiguous 1..N unit range: the
+        # interpolating lookup reads table[lo]/table[lo+1] for any
+        # fractional count and table[N] for the extrapolation anchor, so a
+        # gap or a range mismatch between measured curves would KeyError
+        # (or extrapolate from a missing entry) mid-decision.
+        for name, tbl in (("pi_table", self._pi), ("bw_table", self._bw)):
+            if not tbl or set(tbl) != set(range(1, max(tbl) + 1)):
+                raise ValueError(
+                    f"{name} must cover contiguous unit counts 1..N, got "
+                    f"keys {sorted(tbl)}")
+        if max(self._pi) != max(self._bw):
+            raise ValueError(
+                "pi_table and bw_table must cover the same unit range, got "
+                f"1..{max(self._pi)} vs 1..{max(self._bw)}")
         self._n = max(self._pi)
 
     def _lookup(self, table: Dict[int, float], base_curve, units: float
@@ -110,6 +124,14 @@ class AdaptiveMultiplexer:
             u: hw.pi(u) for u in range(1, total_units + 1)}
         self.bw_table: Dict[int, float] = dict(bw_table) if bw_table else {
             u: hw.bw(u) for u in range(1, total_units + 1)}
+        # a measured table shorter than the replica silently degrades to
+        # linear extrapolation for the uncovered counts — the exact
+        # assumption profiling exists to replace, so refuse it up front
+        if pi_table and max(self.pi_table) < total_units:
+            raise ValueError(
+                f"pi_table/bw_table cover units 1..{max(self.pi_table)} "
+                f"but total_units={total_units}; profile every unit count "
+                "Algorithm 1 can query")
         self.model = RooflineModel(
             cfg, TabulatedPartitionCurves(hw, self.pi_table, self.bw_table),
             tp=tp, sliding_window=sliding_window, mla_absorb=mla_absorb,

@@ -323,7 +323,7 @@ class AsyncDuetEngine(DuetEngine):
                 status = "resumed"
             else:
                 status = "first"
-            if status != "continue" and self.paged and self.ec.prefix_cache:
+            if status != "continue" and self.prefix_cache:
                 self.kv_mgr.insert_prefix(r.rid, r.prefill_token_ids())
             # snapshot the chunk's block table before any retire below can
             # free the pages (an output_len==1 request finishes here)

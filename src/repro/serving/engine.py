@@ -27,6 +27,7 @@ chips the launcher splits the mesh instead (launch/serve.py).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -90,6 +91,20 @@ class DuetEngine:
         self.key = jax.random.PRNGKey(seed)
         self.paged = engine_cfg.paged
 
+        # prefix caching skips the matched prefix's prefill entirely, which
+        # is only sound when every layer's sequence state lives in the paged
+        # KV pool. Recurrent blocks (mamba2/slstm/mlstm) keep per-slot state
+        # that must process every prompt token, so for hybrid/recurrent
+        # patterns a prefix hit would silently produce wrong tokens.
+        self.prefix_cache = self.paged and engine_cfg.prefix_cache
+        if self.prefix_cache and not self.cfg.attention_only:
+            warnings.warn(
+                f"prefix_cache disabled for {self.cfg.name}: block pattern "
+                "contains recurrent layers whose per-slot state must "
+                "process every prompt token; serving a cached prefix would "
+                "corrupt it")
+            self.prefix_cache = False
+
         ps = engine_cfg.page_size
         if self.paged:
             pool_tokens = engine_cfg.kv_pool_tokens \
@@ -97,7 +112,7 @@ class DuetEngine:
             num_pages = -(-pool_tokens // ps) + 1   # +1: reserved null page
             self.kv_mgr = PagedKVCacheManager(
                 PagePoolConfig(num_pages=num_pages, page_size=ps),
-                prefix_cache=engine_cfg.prefix_cache)
+                prefix_cache=self.prefix_cache)
             # block-table width: one request may span the whole pool
             self.max_pages = num_pages - 1
             self.pools = init_page_pools(self.cfg, self.kv_mgr.pool)
@@ -199,7 +214,7 @@ class DuetEngine:
         matched length, so only the uncached suffix is scheduled. Also
         covers preemption-recompute — a victim whose prompt pages are still
         cached resumes from them instead of replaying the full prefill."""
-        if not (self.paged and self.ec.prefix_cache):
+        if not self.prefix_cache:
             return
         if r.prefilled or self.kv_mgr.page_table(r.rid):
             return
@@ -298,7 +313,7 @@ class DuetEngine:
         r.prefill_executed += chunk
         if r.remaining_prompt > 0:
             return "continue"
-        if self.paged and self.ec.prefix_cache:
+        if self.prefix_cache:
             self.kv_mgr.insert_prefix(r.rid, r.prefill_token_ids())
         self.slot_pos[r.slot] = r.prefill_total
         if r.resume_len:
@@ -311,9 +326,16 @@ class DuetEngine:
 
     def _reserve_for(self, reqs: List[Request], kb: int) -> int:
         """Shrink kb down the bucket ladder until the look-ahead reservation
-        covers every request; 0 when even k=1 does not fit."""
+        covers every request; 0 when even k=1 does not fit. The reservation
+        also budgets the CoW copies the decode append may trigger
+        (``headroom``), so :meth:`_privatize_decode_pages` can always take
+        a page instead of crashing on an exhausted pool."""
+        cow = sum(self.kv_mgr.cow_pages_needed(r.rid,
+                                               self.kv_mgr.length(r.rid))
+                  for r in reqs)
         while kb >= 1:
-            if self.kv_mgr.reserve_lookahead([r.rid for r in reqs], kb):
+            if self.kv_mgr.reserve_lookahead([r.rid for r in reqs], kb,
+                                             headroom=cow):
                 return kb
             kb = _k_bucket(kb - 1) if kb > 1 else 0
         return 0
@@ -356,7 +378,9 @@ class DuetEngine:
         write position can be shared (look-ahead pages are fresh). With
         page-granular prefix matching the suffix page is private by
         construction, so this is normally a no-op — it exists so any future
-        sub-page sharing (e.g. fork) cannot corrupt cached pages."""
+        sub-page sharing (e.g. fork) cannot corrupt cached pages. The pages
+        it may take were budgeted as reservation headroom in
+        :meth:`_reserve_for`, so ``_take_page`` cannot fail here."""
         if not self.paged:
             return
         for r in reqs:

@@ -20,6 +20,7 @@ jnp reference read/write path lives here; the Pallas paged-decode kernel
 """
 from __future__ import annotations
 
+import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -28,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import RECURRENT_KINDS, ArchConfig
 
 
 # Single source of truth for the serving page size: engine, simulator and
@@ -80,8 +81,8 @@ class PagedKVCacheManager:
         self._lengths: Dict[int, int] = {}
         # prefix-cache state (empty and inert when prefix_cache=False)
         self._ref: Dict[int, int] = {}              # page -> live refcount
-        self._page_hash: Dict[int, tuple] = {}      # page -> chain key
-        self._hash_index: Dict[tuple, int] = {}     # chain key -> page
+        self._page_hash: Dict[int, bytes] = {}      # page -> chain digest
+        self._hash_index: Dict[bytes, int] = {}     # chain digest -> page
         self._lru: "OrderedDict[int, None]" = OrderedDict()  # ref==0, cached
         self.stats = PrefixCacheStats()
 
@@ -118,6 +119,9 @@ class PagedKVCacheManager:
         d["hit_rate"] = self.stats.hit_rate
         d["cached_pages"] = self.cached_pages
         d["shared_pages"] = self.shared_pages
+        # engines may disable a requested cache (e.g. recurrent blocks);
+        # stream/summary consumers need the effective setting, not the flag
+        d["enabled"] = self.prefix_cache
         return d
 
     def pages_needed(self, rid: int, new_tokens: int) -> int:
@@ -176,11 +180,15 @@ class PagedKVCacheManager:
         self._lengths[rid] = self._lengths.get(rid, 0) + new_tokens
         return new
 
-    def reserve_lookahead(self, rids: List[int], k: int) -> bool:
+    def reserve_lookahead(self, rids: List[int], k: int,
+                          headroom: int = 0) -> bool:
         """Preallocate pages covering k future decode tokens for every
-        request (paper §4.3). All-or-nothing."""
+        request (paper §4.3). All-or-nothing. ``headroom`` pages must remain
+        available *after* the reservation — the engine budgets the CoW
+        copies the decode append may still trigger, so privatisation can
+        never hit an exhausted pool mid-dispatch."""
         need = sum(self.pages_needed(r, k) for r in rids)
-        if need > self.free_pages:
+        if need + headroom > self.free_pages:
             return False
         for r in rids:
             self.allocate(r, k)
@@ -205,16 +213,18 @@ class PagedKVCacheManager:
         self._lengths.pop(rid, None)
 
     # ------------------------------------------------------ prefix caching
-    def _block_keys(self, token_ids) -> List[tuple]:
-        """Chained hash keys, one per *full* page of ``token_ids`` — key i
-        commits to every token in blocks 0..i, so a match at block i implies
-        the whole prefix matches."""
-        ids = np.asarray(token_ids)
-        keys, prev = [], ()
+    def _block_keys(self, token_ids) -> List[bytes]:
+        """Chained SHA-256 digests, one per *full* page of ``token_ids`` —
+        digest i commits to every token in blocks 0..i, so a match at block
+        i implies the whole prefix matches. A cryptographic digest (not
+        Python's 64-bit ``hash``) keys the index: a collision would map a
+        wrong page into a block table and silently serve wrong KV."""
+        ids = np.asarray(token_ids, dtype=np.int64)
+        keys: List[bytes] = []
+        prev = b""
         for i in range(len(ids) // self.page_size):
-            blk = tuple(int(t) for t in
-                        ids[i * self.page_size:(i + 1) * self.page_size])
-            prev = (hash((prev, blk)), blk)
+            blk = ids[i * self.page_size:(i + 1) * self.page_size].tobytes()
+            prev = hashlib.sha256(prev + blk).digest()
             keys.append(prev)
         return keys
 
@@ -324,8 +334,10 @@ class PagedKVCacheManager:
 # ---------------------------------------------------------------------------
 def init_page_pools(cfg: ArchConfig, pool: PagePoolConfig,
                     dtype=jnp.float32):
-    """Per-attention-layer (k_pages, v_pages) arrays. Non-attention layers
-    (SSM/xLSTM) hold None — their state is O(1) and lives in the slab."""
+    """Per-attention-layer (k_pages, v_pages) arrays. Recurrent layers
+    (SSM/xLSTM) hold None — their state is O(1) and lives in the slab. An
+    unknown kind is an error, not a silent stateless layer: a new
+    attention variant must pick its pool shape here."""
     pools = []
     for kind in cfg.block_pattern:
         if kind in ("attn", "attn_moe", "shared_attn"):
@@ -336,8 +348,10 @@ def init_page_pools(cfg: ArchConfig, pool: PagePoolConfig,
             shape_c = (pool.num_pages, pool.page_size, cfg.kv_lora_rank)
             shape_r = (pool.num_pages, pool.page_size, cfg.qk_rope_dim)
             pools.append((jnp.zeros(shape_c, dtype), jnp.zeros(shape_r, dtype)))
-        else:
+        elif kind in RECURRENT_KINDS:
             pools.append(None)
+        else:
+            raise ValueError(f"init_page_pools: unknown block kind {kind!r}")
     return pools
 
 

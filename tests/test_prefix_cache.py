@@ -70,6 +70,38 @@ def _serve(model, params, reqs, engine_cls=DuetEngine, **cfg_kw):
 
 
 # --------------------------------------------------------------- manager
+def test_block_keys_are_chained_sha256_digests():
+    """Regression (REVIEW): index keys must be collision-resistant digests,
+    not Python's 64-bit hash() — a chain-key collision would map a wrong
+    page into a request's block table and silently serve wrong KV."""
+    import hashlib
+    mgr = _mgr(num_pages=9)
+    ids = _ids(5, 2 * PS + 3)               # tail tokens get no key
+    ids64 = np.asarray(ids, dtype=np.int64)
+    d0 = hashlib.sha256(b"" + ids64[:PS].tobytes()).digest()
+    d1 = hashlib.sha256(d0 + ids64[PS:2 * PS].tobytes()).digest()
+    assert mgr._block_keys(ids) == [d0, d1]
+
+
+def test_reserve_lookahead_budgets_cow_headroom():
+    """Regression (REVIEW): the decode reservation must leave headroom for
+    the CoW copy the append may trigger — without it, ensure_writable at a
+    full pool raises MemoryError mid-dispatch instead of the engine
+    shrinking k / preempting during planning."""
+    mgr = _mgr(num_pages=2)                 # a single usable page
+    ids = _ids(6, PS)
+    mgr.allocate(1, PS)
+    mgr.insert_prefix(1, ids)
+    assert mgr.lock_prefix(2, ids) == PS - 1    # shares the only page
+    assert mgr.cow_pages_needed(2, mgr.length(2)) == 1
+    # k=1 itself needs no new page, but the CoW headroom cannot be met:
+    # the engine sees False and shrinks/preempts instead of crashing
+    assert not mgr.reserve_lookahead([2], 1, headroom=1)
+    assert mgr.reserve_lookahead([2], 1)
+    with pytest.raises(MemoryError):
+        mgr.ensure_writable(2, mgr.length(2))
+
+
 def test_match_lock_release_refcounts():
     mgr = _mgr(num_pages=17)
     ids = _ids(0, 20)                       # 2 full blocks + 4 tail tokens
@@ -297,6 +329,27 @@ def test_eviction_replaces_preemption_for_stale_cache(small_model):
     assert s["num_preemptions"] == 0
     assert eng.kv_mgr.stats.evictions > 0
     assert eng.kv_mgr.used_pages == 0
+
+
+def test_recurrent_blocks_disable_prefix_cache():
+    """Regression (REVIEW, high): prefix caching skips the matched prefix's
+    prefill, but mamba2/slstm/mlstm blocks keep per-slot recurrent state
+    that must process every prompt token — a hit would silently produce
+    wrong tokens. Hybrid configs must auto-disable the cache (with a
+    warning) and match the explicitly-uncached run exactly."""
+    cfg = reduced(get_config("zamba2-1.2b"))
+    assert not cfg.attention_only
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    mk = lambda: _shared_reqs(cfg, 24, [12, 12])
+    with pytest.warns(UserWarning, match="prefix_cache disabled"):
+        eng, m, warm = _serve(model, params, mk(), prefix_cache=True)
+    assert eng.prefix_cache is False
+    assert eng.kv_mgr.prefix_cache is False
+    assert eng.kv_mgr.stats.lookups == 0
+    assert m.summary()["num_finished"] == 2
+    _, _, cold = _serve(model, params, mk(), prefix_cache=False)
+    assert warm == cold
 
 
 def test_refcounts_drain_after_rejection(small_model):

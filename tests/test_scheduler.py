@@ -155,6 +155,28 @@ def test_profiled_tables_drive_the_roofline():
             slow_d.partition.t_decode / 2)
 
 
+def test_profiled_tables_validated_at_construction():
+    """Regression (REVIEW): pi/bw tables of unequal ranges previously blew
+    up lazily (KeyError) during a bw lookup mid-decision; gapped tables
+    read missing interpolation entries. Both must fail fast at init."""
+    pi8 = {u: TPU_V5E.pi(u) for u in range(1, 9)}
+    bw8 = {u: TPU_V5E.bw(u) for u in range(1, 9)}
+    with pytest.raises(ValueError, match="same unit range"):
+        AdaptiveMultiplexer(CFG, total_units=8, pi_table=pi8,
+                            bw_table={u: v for u, v in bw8.items() if u <= 4})
+    gapped = {u: v for u, v in pi8.items() if u != 3}
+    with pytest.raises(ValueError, match="contiguous"):
+        AdaptiveMultiplexer(CFG, total_units=8, pi_table=gapped,
+                            bw_table=bw8)
+    # measured curves shorter than the replica would silently degrade to
+    # linear extrapolation for the uncovered unit counts
+    with pytest.raises(ValueError, match="total_units"):
+        AdaptiveMultiplexer(
+            CFG, total_units=8,
+            pi_table={u: v for u, v in pi8.items() if u <= 4},
+            bw_table={u: v for u, v in bw8.items() if u <= 4})
+
+
 def test_simulated_prefix_hit_reduces_scheduled_prefill():
     """A request annotated with cached_prompt (simulator: known prefix-cache
     hit) is scheduled with q = uncached suffix and c = full context."""
