@@ -7,10 +7,11 @@ from repro.core.partition import (PartitionConfig, ScheduleDecision, decide,
                                   optimize_partition)
 from repro.core.multiplexer import AdaptiveMultiplexer, MultiplexerStats
 from repro.core.lookahead import lookahead_decode, make_lookahead_fn
+from repro.core.device import DeviceContext
 
 __all__ = [
     "HardwareSpec", "OpCost", "RequestLoad", "RooflineModel", "TPU_V5E",
     "H100_LIKE", "PartitionConfig", "ScheduleDecision", "decide",
     "optimize_partition", "AdaptiveMultiplexer", "MultiplexerStats",
-    "lookahead_decode", "make_lookahead_fn",
+    "lookahead_decode", "make_lookahead_fn", "DeviceContext",
 ]

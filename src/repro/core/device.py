@@ -1,0 +1,164 @@
+"""Mesh-aware device context threaded through the serving stack.
+
+:class:`DeviceContext` bundles the jax ``Mesh`` with the per-arch sharding
+rules (``repro.models.params.axis_rules``) and exposes the concrete
+``NamedSharding`` trees every layer of the stack needs:
+
+  * ``param_shardings`` — serving-time parameter placement over the
+    ``model`` axis (the same per-arch TP rules training uses)
+  * ``pool_shardings`` — per-layer paged-KV pool placement: GQA pools shard
+    their KV-head axis over ``model``; MLA latent pools replicate (the
+    latent rank does not split); recurrent layers hold no pool
+  * ``replicated`` — host-global metadata (block tables, positions, token
+    ids, RNG keys): every device sees the full value, so the host-side
+    allocator/prefix-cache bookkeeping stays sharding-agnostic
+
+Single-device serving is the degenerate 1-device mesh
+(:meth:`DeviceContext.single`): the same code path compiles with trivial
+partitioning, so there is exactly one execution stack and the multi-chip
+mode cannot drift from the tested single-chip behavior.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RECURRENT_KINDS, ArchConfig
+from repro.models.params import axis_rules, param_shardings, shard_params
+
+_GQA_KINDS = ("attn", "attn_moe", "shared_attn")
+_MLA_KINDS = ("mla", "mla_moe")
+
+
+class DeviceContext:
+    """Mesh + axis rules + in/out shardings for one serving replica."""
+
+    def __init__(self, mesh: Mesh, cfg: ArchConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self._param_sh = None
+        self._pool_sh = None
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel degree: size of the ``model`` axis."""
+        return int(self.mesh.shape.get("model", 1))
+
+    @property
+    def dp(self) -> int:
+        """Data-parallel degree: product of the (pod, data) axes."""
+        n = 1
+        for a in ("pod", "data"):
+            n *= int(self.mesh.shape.get(a, 1))
+        return n
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    def rules(self) -> dict:
+        return axis_rules(self.cfg, self.tp)
+
+    # ------------------------------------------------------------ shardings
+    @property
+    def replicated(self) -> NamedSharding:
+        """Host-global values: full copy on every device."""
+        return NamedSharding(self.mesh, P())
+
+    def param_shardings(self) -> dict:
+        """NamedSharding tree matching the parameter pytree (per-arch TP
+        rules; non-divisible dims stay replicated, preserving numerics)."""
+        if self._param_sh is None:
+            self._param_sh = param_shardings(self.cfg, self.mesh)
+        return self._param_sh
+
+    def pool_shardings(self) -> List[Optional[NamedSharding]]:
+        """Per-layer page-pool shardings, aligned with ``block_pattern``.
+        One sharding per layer (a pytree prefix covering that layer's
+        (k, v) pool pair); ``None`` for recurrent layers (no pool). Pages
+        and slots stay unsharded — block tables are host-global — while
+        page *contents* distribute over the ``model`` (head) axis."""
+        if self._pool_sh is not None:
+            return self._pool_sh
+        rules = self.rules()
+        sh: List[Optional[NamedSharding]] = []
+        for kind in self.cfg.block_pattern:
+            if kind in _GQA_KINDS:
+                sh.append(NamedSharding(
+                    self.mesh, P(None, None, rules["kv_heads"], None)))
+            elif kind in _MLA_KINDS:
+                # latent/rope pools are rank-3 (pages, page_size, dim);
+                # the latent rank does not split over heads -> replicate
+                sh.append(NamedSharding(self.mesh, P(None, None, None)))
+            elif kind in RECURRENT_KINDS:
+                sh.append(None)
+            else:
+                raise ValueError(f"pool_shardings: unknown block {kind!r}")
+        self._pool_sh = sh
+        return sh
+
+    # ------------------------------------------------------------ placement
+    def place_params(self, params):
+        return shard_params(params, self.cfg, self.mesh)
+
+    def place_replicated(self, tree):
+        return jax.tree.map(lambda a: jax.device_put(a, self.replicated),
+                            tree)
+
+    # ---------------------------------------------------------- diagnostics
+    def describe(self) -> dict:
+        """Mesh geometry for logs/summaries (serve.py JSONL + summary)."""
+        return {
+            "devices": self.num_devices,
+            "axes": {k: int(v) for k, v in self.mesh.shape.items()},
+            "tp": self.tp,
+            "dp": self.dp,
+            "platform": self.mesh.devices.flat[0].platform,
+        }
+
+    def collectives_per_iteration(self) -> int:
+        """Predicted collective count of one forward pass on this mesh:
+        one AllReduce per sharded attention out-projection and per sharded
+        FFN/MoE down-projection, plus the vocab-sharded classifier gather.
+        0 on a 1-device mesh — the number the roofline's communication
+        operator prices and the JSONL stream reports."""
+        if self.tp <= 1:
+            return 0
+        rules = self.rules()
+        n = 0
+        for kind in self.cfg.block_pattern:
+            if kind in _GQA_KINDS or kind in _MLA_KINDS:
+                if rules["heads"]:
+                    n += 1
+                if kind in ("attn_moe", "mla_moe"):
+                    if rules["experts"] or rules["moe_ffn"]:
+                        n += 1
+                elif rules["ffn"]:
+                    n += 1
+            elif kind == "mamba2":
+                if rules["ssm_inner"] or rules["ssm_heads"]:
+                    n += 1
+            elif kind == "mlstm":
+                if rules["mlstm_inner"]:
+                    n += 1
+        if rules["vocab"]:
+            n += 1
+        return n
+
+    # --------------------------------------------------------- construction
+    @classmethod
+    def single(cls, cfg: ArchConfig) -> "DeviceContext":
+        """Degenerate 1-device mesh — the default serving context."""
+        from repro.launch.mesh import make_test_mesh
+        return cls(make_test_mesh(1, 1), cfg)
+
+    @classmethod
+    def for_shape(cls, cfg: ArchConfig, *, tp: int = 1, dp: int = 1,
+                  pod: Optional[int] = None) -> "DeviceContext":
+        """Build a (data=dp, model=tp) test mesh over the session's devices
+        (``make_test_mesh`` validates the shape against the device count)."""
+        from repro.launch.mesh import make_test_mesh
+        return cls(make_test_mesh(data=dp, model=tp, pod=pod), cfg)

@@ -124,33 +124,56 @@ def lookahead_decode_paged(model: Model, params, pools, state,
 
 
 def make_lookahead_fn(model: Model, k: int, *, temperature: float = 0.0,
-                      sliding: bool = False):
+                      sliding: bool = False, ctx=None):
     """jit-compiled k-step decode program (one per k — the engine caches
-    these exactly like the paper caches one CUDA Graph per batch shape)."""
+    these exactly like the paper caches one CUDA Graph per batch shape).
+
+    ``ctx`` (:class:`repro.core.device.DeviceContext`): compile with
+    explicit in/out shardings — params per the TP rules, the slab cache
+    and all host-global metadata replicated. ``None`` keeps the
+    placement-agnostic single-device program."""
     fn = functools.partial(lookahead_decode, model, k=k,
                            temperature=temperature, sliding=sliding)
 
-    @jax.jit
     def run(params, cache, first_token, start_pos, key, active_mask):
         return fn(params, cache, first_token, start_pos, key=key,
                   active_mask=active_mask)
 
-    return run
+    if ctx is None:
+        return jax.jit(run)
+    rep = ctx.replicated
+    return jax.jit(
+        run,
+        in_shardings=(ctx.param_shardings(), rep, rep, rep, rep, rep),
+        out_shardings=(rep, rep, rep))
 
 
 def make_paged_lookahead_fn(model: Model, k: int, *,
-                            temperature: float = 0.0):
-    """jit-compiled k-step paged decode program (one per k)."""
+                            temperature: float = 0.0, ctx=None):
+    """jit-compiled k-step paged decode program (one per k).
+
+    With ``ctx``, the program pins the mesh layout end to end: params over
+    the TP rules, page pools sharded on their KV-head axis (pages stay
+    host-global), recurrent state / tokens / tables / positions
+    replicated — decode state lives on the mesh across successive
+    dispatches with no resharding between programs."""
     fn = functools.partial(lookahead_decode_paged, model, k=k,
                            temperature=temperature)
 
-    @jax.jit
     def run(params, pools, state, first_token, start_pos, tables, key,
             active_mask):
         return fn(params, pools, state, first_token, start_pos, tables,
                   key=key, active_mask=active_mask)
 
-    return run
+    if ctx is None:
+        return jax.jit(run)
+    rep = ctx.replicated
+    pool_sh = ctx.pool_shardings()
+    return jax.jit(
+        run,
+        in_shardings=(ctx.param_shardings(), pool_sh, rep, rep, rep, rep,
+                      rep, rep),
+        out_shardings=(rep, pool_sh, rep, rep))
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +199,8 @@ def _tree_write(tree, sub, idx):
 
 def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
                       finish: bool = False, sample: bool = False,
-                      temperature: float = 0.0, donate: bool = True):
+                      temperature: float = 0.0, donate: bool = True,
+                      ctx=None):
     """Build one fused duet super-iteration program.
 
     Static bucket parameters (each combination compiles once — the engine's
@@ -204,6 +228,14 @@ def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
 
     ``sampled`` is the finishing prefill's next-token (or -1): the host
     fetches it together with ``toks`` in the single per-iteration sync.
+
+    ``ctx`` (:class:`repro.core.device.DeviceContext`): compile the fused
+    program with explicit in/out shardings, so the whole super-iteration —
+    k decode steps, the prefill chunk, in-program sampling, and the
+    device-resident ``last_tok``/``pos`` carry — executes on the mesh with
+    params TP-sharded and page pools sharded over the KV-head axis. The
+    async engine's single batched ``device_get`` per super-iteration is
+    unchanged: every fetched output is replicated, so the read is local.
     """
     if kb == 0 and chunk == 0:
         raise ValueError("empty super-iteration")
@@ -272,6 +304,14 @@ def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
             return toks, sampled, last_tok, pos, pools, state, key
 
         donate_argnums = (1, 2, 3, 4) if donate else ()
+        if ctx is not None:
+            rep = ctx.replicated
+            pool_sh = ctx.pool_shardings()
+            return jax.jit(
+                fused, donate_argnums=donate_argnums,
+                in_shardings=(ctx.param_shardings(), pool_sh, rep, rep,
+                              rep, rep, rep, rep, rep, rep, rep, rep, rep),
+                out_shardings=(rep, rep, rep, rep, pool_sh, rep, rep))
     else:
         def fused(params, cache, last_tok, pos, key, active,
                   pre_toks, pre_start, pre_slot, override_tok):
@@ -290,4 +330,11 @@ def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
             return toks, sampled, last_tok, pos, cache, key
 
         donate_argnums = (1, 2, 3) if donate else ()
+        if ctx is not None:
+            rep = ctx.replicated
+            return jax.jit(
+                fused, donate_argnums=donate_argnums,
+                in_shardings=(ctx.param_shardings(), rep, rep, rep, rep,
+                              rep, rep, rep, rep, rep),
+                out_shardings=(rep, rep, rep, rep, rep, rep))
     return jax.jit(fused, donate_argnums=donate_argnums)

@@ -99,6 +99,9 @@ class AdaptiveMultiplexer:
         happens at kernel-grid granularity — see kernels/duet_attention).
       tbt_slo: decode TBT bound (s).
       tp: tensor-parallel degree inside the replica.
+      mesh: the jax Mesh the replica executes on; when given, the roofline
+        derives tp from its ``model`` axis (and rejects a contradicting
+        ``tp``), so planning and execution share one geometry.
       pi_table/bw_table: measured Π(S)/B(S) curves keyed by unit count
         (1..total_units). Default: sampled from the analytic ``hw`` spec.
         Every roofline estimate this controller makes goes through the
@@ -111,8 +114,10 @@ class AdaptiveMultiplexer:
                  sliding_window: Optional[int] = None,
                  mla_absorb: bool = False, page_size: int = 1,
                  pi_table: Optional[Dict[int, float]] = None,
-                 bw_table: Optional[Dict[int, float]] = None):
+                 bw_table: Optional[Dict[int, float]] = None,
+                 mesh=None):
         self.cfg = cfg
+        self.mesh = mesh  # executed geometry; RooflineModel derives tp
         self.hw = hw
         self.total_units = total_units
         self.tbt_slo = tbt_slo
@@ -135,7 +140,7 @@ class AdaptiveMultiplexer:
         self.model = RooflineModel(
             cfg, TabulatedPartitionCurves(hw, self.pi_table, self.bw_table),
             tp=tp, sliding_window=sliding_window, mla_absorb=mla_absorb,
-            page_size=page_size)
+            page_size=page_size, mesh=mesh)
         self.stats = MultiplexerStats()
         # grid-granularity variant: when the replica is one chip, Algorithm 1
         # enumerates fused-kernel grid slots instead of chips.

@@ -120,9 +120,21 @@ class RooflineModel:
                  tp: int = 1, dtype_bytes: int = 2,
                  mla_absorb: bool = False,
                  sliding_window: Optional[int] = None,
-                 page_size: int = 1):
+                 page_size: int = 1, mesh=None):
         self.cfg = cfg
         self.hw = hw
+        # ``mesh``: the jax.sharding.Mesh the engine actually executes on.
+        # The ring-AllReduce communication term then prices the *executed*
+        # TP geometry (model-axis size) rather than a hand-passed degree,
+        # so the partition optimizer and the multiplexer cannot plan with
+        # a different shape than the sharded programs run with.
+        if mesh is not None:
+            mesh_tp = int(mesh.shape.get("model", 1))
+            if tp not in (1, mesh_tp):
+                raise ValueError(
+                    f"RooflineModel: tp={tp} contradicts the mesh's model "
+                    f"axis ({mesh_tp}); pass one geometry, not two")
+            tp = mesh_tp
         self.tp = tp
         self.b = dtype_bytes
         self.mla_absorb = mla_absorb

@@ -33,7 +33,24 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_test_mesh(data: int = 2, model: int = 2,
                    pod: Optional[int] = None) -> Mesh:
-    """Small mesh over however many (host) devices the test session has."""
+    """Small mesh over however many (host) devices the test session has.
+
+    The requested shape is validated against ``jax.device_count()`` up
+    front — ``jax.make_mesh``'s own failure surfaces as an opaque reshape
+    error, while the fix (force host devices or shrink --tp/--dp) is only
+    obvious from the counts."""
+    if data < 1 or model < 1 or (pod is not None and pod < 1):
+        raise ValueError(
+            f"mesh axes must be positive, got data={data} model={model} "
+            f"pod={pod}")
+    need = data * model * (pod or 1)
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh shape (pod={pod}, data={data}, model={model}) needs "
+            f"{need} devices but only {have} are visible; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N (before "
+            "importing jax) or reduce the requested parallelism")
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
@@ -51,8 +68,15 @@ def split_duet_submeshes(mesh: Mesh, decode_chips: int):
     Both sub-meshes keep the full data/pod axes (each data shard splits its
     model column group).
     """
+    if "model" not in mesh.shape:
+        raise ValueError(
+            f"split_duet_submeshes needs a 'model' axis, mesh has "
+            f"{tuple(mesh.axis_names)}")
     model_size = mesh.shape["model"]
-    assert 0 < decode_chips < model_size
+    if not 0 < decode_chips < model_size:
+        raise ValueError(
+            f"decode_chips must be in (0, {model_size}) so both sub-meshes "
+            f"are non-empty, got {decode_chips}")
     devs = mesh.devices  # ndarray indexed by axis order
     model_axis = list(mesh.axis_names).index("model")
     dec = np.take(devs, range(model_size - decode_chips, model_size),

@@ -19,6 +19,8 @@ Usage:
       --trace azure-conv --qps 4 --num-requests 32
   PYTHONPATH=src python -m repro.launch.serve --reduced --stream \
       --num-requests 8 --no-paged
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --reduced --tp 2 --num-requests 8
 """
 from __future__ import annotations
 
@@ -31,6 +33,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, list_configs, reduced
+from repro.core.device import DeviceContext
 from repro.models.transformer import Model
 from repro.serving.async_engine import (AsyncDuetEngine, FinishEvent,
                                         TokenEvent)
@@ -71,6 +74,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--attn-kernel", action="store_true",
                     help="route decode attention through the Pallas kernels")
     ap.add_argument("--temperature", type=float, default=0.0)
+    # mesh-aware serving: shard params + KV page pools over a device mesh.
+    # tp=1, dp=1 (default) is the degenerate 1-device mesh — same code
+    # path, token-identical output.
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (mesh 'model' axis): "
+                         "params shard per the arch TP rules, paged KV "
+                         "pools shard their head axis; needs tp*dp "
+                         "visible devices (XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="mesh 'data' axis size — geometry only for now: "
+                         "batch-bearing arrays stay replicated, so dp>1 "
+                         "duplicates work rather than adding replica "
+                         "throughput (DP execution is a later scale item)")
     # copy-on-write prefix caching (paged mode only; default: follow
     # --paged, so --no-paged alone never warns about a flag nobody passed)
     ap.add_argument("--prefix-cache", dest="prefix_cache",
@@ -147,6 +164,12 @@ def main(argv=None):
     model = Model(cfg, attn_kernel=args.attn_kernel)
     params = model.init(jax.random.PRNGKey(args.seed))
 
+    # mesh-aware serving: a real (dp, tp) mesh when requested, otherwise
+    # the engine's default degenerate 1-device mesh
+    ctx = None
+    if args.tp > 1 or args.dp > 1:
+        ctx = DeviceContext.for_shape(cfg, tp=args.tp, dp=args.dp)
+
     reqs = synth_trace(args.trace, args.num_requests, args.qps,
                        seed=args.seed)
     reqs = _apply_shared_prefix(reqs, args.shared_prefix_len,
@@ -165,10 +188,12 @@ def main(argv=None):
         paged=args.paged, page_size=args.page_size,
         kv_pool_tokens=args.kv_pool_tokens,
         prefix_cache=prefix_cache,
-        temperature=args.temperature)
+        temperature=args.temperature,
+        tp=args.tp, units=max(1, args.tp))
 
     if args.stream:
-        engine = AsyncDuetEngine(model, params, ec, seed=args.seed)
+        engine = AsyncDuetEngine(model, params, ec, seed=args.seed,
+                                 ctx=ctx)
         engine.submit(reqs)   # open-loop: arrivals replay on the inbox
         for ev in engine.events():
             if isinstance(ev, TokenEvent):
@@ -180,6 +205,13 @@ def main(argv=None):
                                   "reason": ev.reason,
                                   "n_tokens": ev.n_tokens,
                                   "t": round(ev.t, 6)}))
+        # stream consumers can diagnose a sharded run from the log alone:
+        # the executed mesh geometry + predicted collective count ride the
+        # JSONL stream next to the prefix_cache outcome
+        print(json.dumps({
+            "event": "mesh", **engine.ctx.describe(),
+            "collectives_per_iteration":
+                engine.ctx.collectives_per_iteration()}))
         if args.paged:
             # stream consumers get the cache outcome as a JSONL event too
             print(json.dumps({"event": "prefix_cache",
@@ -188,12 +220,15 @@ def main(argv=None):
         out = metrics.summary()
         out["dispatch_stats"] = dataclasses.asdict(engine.dstats)
     else:
-        engine = DuetEngine(model, params, ec, seed=args.seed)
+        engine = DuetEngine(model, params, ec, seed=args.seed, ctx=ctx)
         engine.submit(reqs)
         metrics = engine.run()
         out = metrics.summary()
     out["duet_fraction"] = engine.mux.stats.duet_fraction
     out["iterations"] = engine.mux.stats.iterations
+    out["mesh"] = engine.ctx.describe()
+    out["collectives_per_iteration"] = \
+        engine.ctx.collectives_per_iteration()
     if args.paged:
         out["prefix_cache"] = engine.kv_mgr.prefix_stats()
     print(json.dumps(out, indent=2))

@@ -1,10 +1,10 @@
 from repro.models.transformer import Model, cache_pspecs, cache_specs
 from repro.models.params import (abstract_params, count_params_analytical,
                                  init_params, param_shardings, param_specs,
-                                 tp_adjusted_config)
+                                 shard_params, tp_adjusted_config)
 
 __all__ = [
     "Model", "cache_pspecs", "cache_specs", "abstract_params",
     "count_params_analytical", "init_params", "param_shardings",
-    "param_specs", "tp_adjusted_config",
+    "param_specs", "shard_params", "tp_adjusted_config",
 ]

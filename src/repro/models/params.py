@@ -325,3 +325,12 @@ def param_shardings(cfg: ArchConfig, mesh: Mesh) -> dict:
     return jax.tree.map(lambda s: NamedSharding(mesh, s),
                         param_specs(cfg, mesh),
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_params(params, cfg: ArchConfig, mesh: Mesh):
+    """Serving-time parameter placement: distribute an (initialised or
+    restored) parameter tree over the mesh per the same per-arch TP rules
+    training lowers with. Weights whose dims do not divide the ``model``
+    axis stay replicated, so placement never changes numerics — a 1-device
+    mesh is the identity."""
+    return jax.device_put(params, param_shardings(cfg, mesh))

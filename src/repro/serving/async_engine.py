@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.device import DeviceContext
 from repro.core.lookahead import make_superiter_fn
 from repro.core.roofline import HardwareSpec, TPU_V5E
 from repro.models.transformer import Model
@@ -129,13 +130,19 @@ class AsyncDuetEngine(DuetEngine):
     """
 
     def __init__(self, model: Model, params, engine_cfg: EngineConfig,
-                 hw: HardwareSpec = TPU_V5E, seed: int = 0):
-        super().__init__(model, params, engine_cfg, hw=hw, seed=seed)
+                 hw: HardwareSpec = TPU_V5E, seed: int = 0,
+                 ctx: Optional[DeviceContext] = None):
+        super().__init__(model, params, engine_cfg, hw=hw, seed=seed,
+                         ctx=ctx)
         B = engine_cfg.max_slots
-        # device-resident decode inputs: next token + cache position per slot
-        self.d_last_tok = jnp.zeros((B, 1), jnp.int32)
-        self.d_pos = jnp.zeros((B,), jnp.int32)
-        self.d_key = self.key
+        # device-resident decode inputs: next token + cache position per
+        # slot — replicated on the mesh, so they thread between sharded
+        # super-iteration programs without resharding and the per-iteration
+        # batched device_get stays a local read
+        self.d_last_tok = self.ctx.place_replicated(
+            jnp.zeros((B, 1), jnp.int32))
+        self.d_pos = self.ctx.place_replicated(jnp.zeros((B,), jnp.int32))
+        self.d_key = self.ctx.place_replicated(self.key)
         # donation rebinds cache/pool buffers in place; the CPU backend does
         # not implement it and would warn on every dispatch
         self._donate = jax.default_backend() != "cpu"
@@ -366,7 +373,8 @@ class AsyncDuetEngine(DuetEngine):
             prog = make_superiter_fn(
                 self.model, kb, paged=self.paged, chunk=chunk,
                 finish=finish, sample=sample,
-                temperature=self.ec.temperature, donate=self._donate)
+                temperature=self.ec.temperature, donate=self._donate,
+                ctx=self.ctx)
             self._programs[key] = prog
         else:
             self.dstats.cache_hits += 1

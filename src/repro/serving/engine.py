@@ -24,9 +24,15 @@ fits the pool.
 Duet mode on a single chip uses the fused duet-attention kernel's grid
 partitioning (kernel-level analogue of SM masking — DESIGN.md §2); across
 chips the launcher splits the mesh instead (launch/serve.py).
+
+Mesh-aware execution (DESIGN.md §7): a :class:`DeviceContext` threads the
+mesh + shardings through params, page pools and every jitted program;
+single-device serving is the degenerate 1-device mesh, and TP>1 runs are
+token-identical to it (tests/test_sharded_serving.py).
 """
 from __future__ import annotations
 
+import copy
 import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -36,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.device import DeviceContext
 from repro.core.lookahead import make_lookahead_fn, make_paged_lookahead_fn
 from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import HardwareSpec, TPU_V5E
@@ -82,14 +89,36 @@ class EngineConfig:
 
 class DuetEngine:
     def __init__(self, model: Model, params, engine_cfg: EngineConfig,
-                 hw: HardwareSpec = TPU_V5E, seed: int = 0):
+                 hw: HardwareSpec = TPU_V5E, seed: int = 0,
+                 ctx: Optional[DeviceContext] = None):
         self.model = model
         self.cfg: ArchConfig = model.cfg
-        self.params = params
         self.ec = engine_cfg
         self.hw = hw
         self.key = jax.random.PRNGKey(seed)
         self.paged = engine_cfg.paged
+
+        # device context: mesh + shardings. Single-device serving is the
+        # degenerate 1-device mesh, so there is exactly one execution path
+        # and TP>1 cannot drift from the tested single-chip behavior.
+        self.ctx = ctx if ctx is not None else DeviceContext.single(self.cfg)
+        if engine_cfg.tp not in (1, self.ctx.tp) and self.ctx.tp != 1:
+            raise ValueError(
+                f"EngineConfig.tp={engine_cfg.tp} contradicts the device "
+                f"context's model axis ({self.ctx.tp}); pass one geometry")
+        # tp for planning: the executed mesh wins; EngineConfig.tp remains
+        # the modeling-only knob for single-device what-if runs
+        self._tp = self.ctx.tp if self.ctx.tp > 1 else engine_cfg.tp
+        if self.ctx.tp > 1 and model.attn_kernel:
+            warnings.warn(
+                "attn_kernel disabled under TP>1: the Pallas paged-decode "
+                "kernel is not partition-aware yet; using the sharded jnp "
+                "attention path")
+            # per-engine override: other engines may share this Model
+            model = copy.copy(model)
+            model.attn_kernel = False
+            self.model = model
+        self.params = self.ctx.place_params(params)
 
         # prefix caching skips the matched prefix's prefill entirely, which
         # is only sound when every layer's sequence state lives in the paged
@@ -115,8 +144,10 @@ class DuetEngine:
                 prefix_cache=self.prefix_cache)
             # block-table width: one request may span the whole pool
             self.max_pages = num_pages - 1
-            self.pools = init_page_pools(self.cfg, self.kv_mgr.pool)
-            self.cache = model.init_state_cache(engine_cfg.max_slots)
+            self.pools = init_page_pools(self.cfg, self.kv_mgr.pool,
+                                         shardings=self.ctx.pool_shardings())
+            self.cache = self.ctx.place_replicated(
+                model.init_state_cache(engine_cfg.max_slots))
         else:
             pool_pages = engine_cfg.max_slots * (
                 -(-engine_cfg.max_len // ps)) + 1
@@ -124,12 +155,17 @@ class DuetEngine:
                 PagePoolConfig(num_pages=pool_pages, page_size=ps))
             self.max_pages = -(-engine_cfg.max_len // ps)
             self.pools = None
-            self.cache = model.init_cache(engine_cfg.max_slots,
-                                          engine_cfg.max_len)
+            self.cache = self.ctx.place_replicated(
+                model.init_cache(engine_cfg.max_slots, engine_cfg.max_len))
+        # the multiplexer and the partition optimizer plan with the SAME
+        # geometry the sharded programs execute: the mesh sets the
+        # communication term's TP degree, and a TP replica spans tp chips
         self.mux = AdaptiveMultiplexer(
-            self.cfg, hw=hw, total_units=engine_cfg.units,
-            tbt_slo=engine_cfg.tbt_slo, tp=engine_cfg.tp,
-            page_size=ps if self.paged else 1)
+            self.cfg, hw=hw,
+            total_units=max(engine_cfg.units, self._tp),
+            tbt_slo=engine_cfg.tbt_slo, tp=self._tp,
+            page_size=ps if self.paged else 1,
+            mesh=self.ctx.mesh if self.ctx.tp > 1 else None)
         self.policy = DuetPolicy(self.mux,
                                  token_budget=engine_cfg.token_budget,
                                  max_batch=engine_cfg.max_slots,
@@ -142,22 +178,34 @@ class DuetEngine:
         self.slot_last_token = np.zeros(engine_cfg.max_slots, np.int32)
         self.finished: List[Request] = []
         self._decode_fns: Dict[int, callable] = {}
+        # prefill programs carry explicit in/out shardings: params per the
+        # TP rules, pools sharded on the KV-head axis, everything host-
+        # global (tokens, tables, start offsets, logits) replicated
+        rep = self.ctx.replicated
+        psh = self.ctx.param_shardings()
+        pool_sh = self.ctx.pool_shardings()
         self._prefill_fn = jax.jit(
             lambda p, toks, cache, start: model.prefill(
-                p, toks, cache=cache, start_pos=start))
+                p, toks, cache=cache, start_pos=start),
+            in_shardings=(psh, rep, rep, rep),
+            out_shardings=(rep, rep))
         self._prefill_paged_fn = jax.jit(
             lambda p, toks, pools, state, tbl, start: model.prefill_paged(
-                p, toks, pools, state, tbl, start_pos=start))
+                p, toks, pools, state, tbl, start_pos=start),
+            in_shardings=(psh, rep, pool_sh, rep, rep, rep),
+            out_shardings=(rep, pool_sh, rep))
 
     # ------------------------------------------------------------- plumbing
     def _decode_fn(self, k: int):
         if k not in self._decode_fns:
             if self.paged:
                 self._decode_fns[k] = make_paged_lookahead_fn(
-                    self.model, k, temperature=self.ec.temperature)
+                    self.model, k, temperature=self.ec.temperature,
+                    ctx=self.ctx)
             else:
                 self._decode_fns[k] = make_lookahead_fn(
-                    self.model, k, temperature=self.ec.temperature)
+                    self.model, k, temperature=self.ec.temperature,
+                    ctx=self.ctx)
         return self._decode_fns[k]
 
     def _table_width(self, rids: List[int]) -> int:

@@ -333,13 +333,24 @@ class PagedKVCacheManager:
 # Device pools + jnp reference read/write (the Pallas kernel mirrors these)
 # ---------------------------------------------------------------------------
 def init_page_pools(cfg: ArchConfig, pool: PagePoolConfig,
-                    dtype=jnp.float32):
+                    dtype=jnp.float32, *, shardings=None):
     """Per-attention-layer (k_pages, v_pages) arrays. Recurrent layers
     (SSM/xLSTM) hold None — their state is O(1) and lives in the slab. An
     unknown kind is an error, not a silent stateless layer: a new
-    attention variant must pick its pool shape here."""
+    attention variant must pick its pool shape here.
+
+    ``shardings``: optional per-layer placement list aligned with
+    ``block_pattern`` (see ``DeviceContext.pool_shardings``). Pools shard
+    their *contents* (the KV-head axis) over the mesh's ``model`` axis
+    while the page/slot dims stay unsharded — block tables, refcounts and
+    the prefix-cache index are host-global metadata, identical on every
+    device, so the allocator above never needs to know about the mesh."""
+    if shardings is not None and len(shardings) != len(cfg.block_pattern):
+        raise ValueError(
+            f"init_page_pools: {len(shardings)} shardings for "
+            f"{len(cfg.block_pattern)} layers")
     pools = []
-    for kind in cfg.block_pattern:
+    for i, kind in enumerate(cfg.block_pattern):
         if kind in ("attn", "attn_moe", "shared_attn"):
             shape = (pool.num_pages, pool.page_size, cfg.num_kv_heads,
                      cfg.head_dim)
@@ -352,13 +363,18 @@ def init_page_pools(cfg: ArchConfig, pool: PagePoolConfig,
             pools.append(None)
         else:
             raise ValueError(f"init_page_pools: unknown block kind {kind!r}")
+        if shardings is not None and pools[-1] is not None:
+            pools[-1] = jax.device_put(pools[-1], shardings[i])
     return pools
 
 
 def copy_pool_pages(pools, copies: List[Tuple[int, int]]):
     """Apply CoW page copies (src, dst) to every attention layer's pools.
     Host-triggered device ops only — no blocking reads, so the async engine
-    can enqueue them between dispatches."""
+    can enqueue them between dispatches. On sharded pools the gather/scatter
+    runs along the unsharded page axis, so each device copies only its own
+    head shard — the copy is a sharded device op with no cross-device
+    traffic, and the (src, dst) page ids stay host-global."""
     if not copies:
         return pools
     src = jnp.asarray([s for s, _ in copies])

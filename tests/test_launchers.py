@@ -13,6 +13,11 @@ def test_serve_cli(capsys):
     assert '"num_finished": 4' in captured.out
     # clamping is no longer silent: the truncation is reported on stderr
     assert "warning:" in captured.err and "clamping" in captured.err
+    # sharded runs are diagnosable from the summary alone; the default is
+    # the degenerate 1-device mesh with zero collectives
+    assert '"mesh"' in captured.out
+    assert '"collectives_per_iteration": 0' in captured.out
+    assert '"tp": 1' in captured.out
 
 
 def test_serve_cli_stream(capsys):
@@ -47,9 +52,28 @@ def test_train_cli(capsys):
 
 
 def test_mesh_helpers():
-    from repro.launch.mesh import make_test_mesh, split_duet_submeshes
+    from repro.launch.mesh import data_axes, make_test_mesh, \
+        split_duet_submeshes
     mesh = make_test_mesh(1, 1)
     assert mesh.shape == {"data": 1, "model": 1}
-    # duet sub-mesh splitting needs >1 model column; exercise the API shape
-    with pytest.raises(AssertionError):
+    assert data_axes(mesh) == ("data",)
+    # duet sub-mesh splitting needs >1 model column: a clear ValueError,
+    # not a bare assert (callers branch on it to fall back to kernel-grid
+    # partitioning)
+    with pytest.raises(ValueError, match="decode_chips"):
         split_duet_submeshes(mesh, 1)
+
+
+def test_make_test_mesh_validates_device_count():
+    """Oversubscribed shapes name the fix (forced host devices) instead of
+    dying inside jax.make_mesh's reshape. Multi-device split geometry is
+    covered in tests/test_sharded_serving.py (subprocess, 8 devices)."""
+    import jax
+    too_many = jax.device_count() + 1
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        from repro.launch.mesh import make_test_mesh
+        make_test_mesh(too_many, 1)
+    with pytest.raises(ValueError, match="positive"):
+        from repro.launch.mesh import make_test_mesh
+        make_test_mesh(0, 1)
