@@ -1,0 +1,28 @@
+"""Process-environment helpers for benchmark modules.
+
+Import-safe by construction: this module must never (transitively) import
+jax — its whole job is to mutate ``XLA_FLAGS`` *before* jax starts.
+``benchmarks.common`` cannot host this (its repro imports pull jax in).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def maybe_force_host_devices(is_main: bool, n: int = 2) -> None:
+    """Force ``n`` host platform devices for a directly-executed benchmark.
+
+    Call at module top as ``maybe_force_host_devices(__name__ ==
+    "__main__")`` before any jax-importing statement. No-op unless the
+    module owns the process (``is_main``), jax has not started yet, and
+    the operator has not already forced a device count via ``XLA_FLAGS``
+    — an importing runner keeps its own topology and the benchmark's
+    real-execution leg skips with a pointer instead.
+    """
+    if is_main and "jax" not in sys.modules \
+            and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()

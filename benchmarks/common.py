@@ -12,10 +12,17 @@ from repro.serving.simulator import (DisaggSim, SimConfig,
 
 DEFAULT_ARCH = "qwen3-4b"   # the paper's model class (Qwen3 family)
 
+# Every emit() lands here as well as on stdout, so benchmarks/run.py can
+# write the whole quick sweep into a BENCH_<date>.json perf-trajectory
+# artifact (uploaded by the CI smoke job).
+ROWS: list = []
+
 
 def emit(name: str, value: float, derived: str = "") -> None:
-    """Scaffold contract: ``name,us_per_call,derived`` CSV rows."""
+    """Scaffold contract: ``name,us_per_call,derived`` CSV rows (also
+    recorded in :data:`ROWS` for the benchmark-run artifact)."""
     print(f"{name},{value:.4f},{derived}")
+    ROWS.append({"name": name, "value": float(value), "derived": derived})
 
 
 def timed(fn, *args, repeats: int = 3, **kw):

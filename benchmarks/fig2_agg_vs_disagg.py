@@ -4,14 +4,76 @@
 Expected qualitative reproduction (Obs. 3): disaggregation holds TBT flat but
 its TTFT explodes at lower QPS and total token throughput falls well below
 aggregation, because a single prefill worker is the bottleneck.
+
+Real leg (``run_real``): the same 2-replica round-robin cluster as *actual
+execution* — a ``serving.router.Router`` over two real dp=2 engine replicas
+on forced host devices, against a ``ClusterSim`` of the identical reduced
+workload, emitting sim-vs-real TTFT/TBT delta rows. Skipped with a pointer
+when fewer than 2 devices are visible.
 """
 from __future__ import annotations
 
-from repro.configs import get_config
+import copy
+
+from benchmarks._env import maybe_force_host_devices
+
+maybe_force_host_devices(__name__ == "__main__")
+
+from repro.configs import get_config, reduced
 from repro.serving.simulator import (ClusterSim, DisaggSim, SimConfig,
                                      make_baseline_instance)
-from repro.serving.traces import synthetic_fixed
+from repro.serving.traces import synth_trace, synthetic_fixed
 from benchmarks.common import DEFAULT_ARCH, emit
+
+
+def run_real(quick: bool = True):
+    """dp=2 round-robin cluster, real Router vs ClusterSim prediction.
+    Both legs run duet replicas (the real engines ARE DuetPolicy
+    engines), so the emitted delta isolates the engine model rather than
+    conflating a scheduler mismatch into it."""
+    import jax
+    if jax.device_count() < 2:
+        print("# fig2 real leg skipped: needs >=2 devices; run with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=2 set "
+              "before jax is imported")
+        return
+    from repro.core.device import DeviceContext
+    from repro.models.transformer import Model
+    from repro.serving.engine import DuetEngine, EngineConfig
+    from repro.serving.router import Router
+    from repro.serving.simulator import make_duet_instance
+
+    cfg = reduced(get_config(DEFAULT_ARCH))
+    n_req = 8 if quick else 24
+    reqs = synth_trace("azure-conv", n_req, qps=6.0, seed=0)
+    for r in reqs:          # CPU-executable footprints
+        r.prompt_len = min(r.prompt_len, 96)
+        r.output_len = min(r.output_len, 16)
+
+    sim = ClusterSim(lambda i: make_duet_instance(
+        cfg, SimConfig(units=1, tp=1), token_budget=64), n=2)
+    sim_m = sim.run([copy.deepcopy(r) for r in reqs]).summary()
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ec = EngineConfig(max_slots=4, max_len=256, token_budget=64)
+    router = Router(model, params, ec,
+                    ctx=DeviceContext.for_shape(cfg, tp=1, dp=2),
+                    policy="round-robin", engine_cls=DuetEngine)
+    router.submit([copy.deepcopy(r) for r in reqs])
+    real_m = router.run().summary()
+
+    emit("fig2_sim_dp2_ttft_s", sim_m["mean_ttft_s"])
+    emit("fig2_sim_dp2_tbt_ms", sim_m["mean_tbt_s"] * 1e3)
+    emit("fig2_real_dp2_ttft_s", real_m["mean_ttft_s"],
+         f"n={real_m['num_finished']}")
+    emit("fig2_real_dp2_tbt_ms", real_m["mean_tbt_s"] * 1e3)
+    emit("fig2_real_vs_sim_ttft_delta_pct",
+         100.0 * (real_m["mean_ttft_s"] - sim_m["mean_ttft_s"])
+         / max(sim_m["mean_ttft_s"], 1e-12))
+    emit("fig2_real_vs_sim_tbt_delta_pct",
+         100.0 * (real_m["mean_tbt_s"] - sim_m["mean_tbt_s"])
+         / max(sim_m["mean_tbt_s"], 1e-12))
 
 
 def run(quick: bool = True):
@@ -31,6 +93,7 @@ def run(quick: bool = True):
         emit(f"fig2_disagg_tbt_ms_qps{qps}", dis["mean_tbt_s"] * 1e3)
         emit(f"fig2_disagg_tokens_per_s_qps{qps}",
              dis["total_token_throughput"])
+    run_real(quick=quick)
 
 
 if __name__ == "__main__":

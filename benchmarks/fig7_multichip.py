@@ -17,18 +17,10 @@ Two legs:
 from __future__ import annotations
 
 import copy
-import os
-import sys
 
-# Force 2 host devices ONLY when this module owns the process (direct
-# execution) and jax has not started — an importing runner keeps its own
-# topology and the real leg skips with a pointer instead.
-if __name__ == "__main__" and "jax" not in sys.modules \
-        and "xla_force_host_platform_device_count" \
-        not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=2"
-                               ).strip()
+from benchmarks._env import maybe_force_host_devices
+
+maybe_force_host_devices(__name__ == "__main__")
 
 from repro.configs import get_config, reduced
 from repro.serving.simulator import (DisaggSim, SimConfig,

@@ -1,16 +1,37 @@
 """Benchmark entry point — one function per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows (quick mode by default; each module's
-``__main__`` runs the full sweep). See EXPERIMENTS.md for recorded results.
+``__main__`` runs the full sweep) and writes the whole sweep into a
+``BENCH_<date>.json`` perf-trajectory artifact: every emitted row plus
+per-suite status/timing, so consecutive CI runs (the smoke job uploads the
+file as a workflow artifact) give a comparable perf history. See
+EXPERIMENTS.md for recorded results.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import (ablation_lookahead, fig1_saturation,
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="Run every benchmark suite in quick mode and record a "
+                    "BENCH_<date>.json artifact.")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: BENCH_<YYYY-MM-DD>.json "
+                         "in the current directory)")
+    ap.add_argument("--no-artifact", action="store_true",
+                    help="print CSV rows only; skip writing the JSON "
+                         "artifact")
+    return ap
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    from benchmarks import (ablation_lookahead, common, fig1_saturation,
                             fig2_agg_vs_disagg, fig3_partition_scaling,
                             fig6_end_to_end, fig7_multichip,
                             fig8_roofline_accuracy, fig9_static_partition,
@@ -32,16 +53,37 @@ def main() -> None:
         ("roofline", roofline_table),
     ]
     failures = []
+    suite_records = {}
     for name, mod in suites:
         t0 = time.time()
         print(f"# --- {name} ---")
         try:
             mod.run(quick=True)
+            status = "ok"
         except Exception as e:  # noqa: BLE001 — report, keep the suite going
             failures.append((name, e))
+            status = f"failed: {type(e).__name__}: {e}"
             print(f"# {name} FAILED: {type(e).__name__}: {e}",
                   file=sys.stderr)
-        print(f"# {name} done in {time.time() - t0:.1f}s")
+        dt = time.time() - t0
+        suite_records[name] = {"status": status, "seconds": round(dt, 2)}
+        print(f"# {name} done in {dt:.1f}s")
+
+    if not args.no_artifact:
+        date = time.strftime("%Y-%m-%d")
+        path = args.out or f"BENCH_{date}.json"
+        artifact = {
+            "date": date,
+            "quick": True,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "suites": suite_records,
+            "rows": common.ROWS,
+        }
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {len(common.ROWS)} rows to {path}", file=sys.stderr)
+
     if failures:
         raise SystemExit(f"{len(failures)} benchmark(s) failed: "
                          f"{[n for n, _ in failures]}")

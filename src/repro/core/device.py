@@ -148,6 +148,24 @@ class DeviceContext:
             n += 1
         return n
 
+    # ------------------------------------------------------------ replicas
+    def split_replicas(self) -> List["DeviceContext"]:
+        """Carve this context's data axes into per-replica TP contexts.
+
+        Each of the ``dp`` returned contexts wraps one ``(data=1,
+        model=tp)`` submesh (``launch.mesh.split_data_axis``) over a
+        disjoint device set, so every serving replica owns its params
+        placement, paged KV pool, prefix cache and multiplexer — duet
+        decisions stay replica-local while the cluster router dispatches
+        requests across replicas.
+
+        Returns:
+            ``dp`` contexts; ``[self]``-equivalent when ``dp == 1``.
+        """
+        from repro.launch.mesh import split_data_axis
+        return [DeviceContext(m, self.cfg)
+                for m in split_data_axis(self.mesh)]
+
     # --------------------------------------------------------- construction
     @classmethod
     def single(cls, cfg: ArchConfig) -> "DeviceContext":

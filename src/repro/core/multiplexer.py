@@ -149,6 +149,19 @@ class AdaptiveMultiplexer:
     # ------------------------------------------------------------------
     def step(self, prefill_reqs: Sequence[RequestLoad],
              decode_reqs: Sequence[RequestLoad]) -> ScheduleDecision:
+        """Make one iteration's duet-vs-aggregated decision (Algorithm 1
+        front-end).
+
+        Args:
+            prefill_reqs: this iteration's prefill chunks as request loads
+                (``q`` = chunk tokens, ``c`` = tokens already prefilled).
+            decode_reqs: the decode batch (``q=1``, ``c`` = context).
+
+        Returns:
+            :class:`ScheduleDecision` — ``mode="duet"`` carries the
+            (S_p, S_d, k) partition; stats counters update as a side
+            effect (``self.stats``).
+        """
         units = self.total_units if self.total_units > 1 else self.granularity
         model = self.model
         if self.total_units == 1:
@@ -167,6 +180,9 @@ class AdaptiveMultiplexer:
         return decision
 
     def predict_mixed(self, reqs: Sequence[RequestLoad]) -> float:
+        """Roofline latency (s) of one aggregated iteration running
+        ``reqs`` on all of this replica's units — the τ_TBT check duet
+        mode is gated on."""
         return self.model.iteration_latency(reqs, units=self.total_units)
 
 

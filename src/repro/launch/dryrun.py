@@ -192,8 +192,11 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return record
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """Dry-run CLI (exposed for the docs-drift guard in tools/)."""
+    ap = argparse.ArgumentParser(
+        description="Lower/compile serving programs on a forced host-device "
+                    "production mesh without executing them.")
     ap.add_argument("--arch", choices=list_configs())
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
@@ -203,7 +206,11 @@ def main(argv=None):
     ap.add_argument("--pad-experts", action="store_true")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--out", default=None)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     combos = []
     if args.all:

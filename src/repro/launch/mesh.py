@@ -60,6 +60,37 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
+def split_data_axis(mesh: Mesh) -> Tuple[Mesh, ...]:
+    """Split a mesh into one TP submesh per data-parallel replica.
+
+    The combined (pod, data) axes are carved into single-column
+    ``(data=1, model=tp)`` submeshes — the cluster-router analogue of
+    :func:`split_duet_submeshes`: where the duet split partitions the
+    ``model`` axis between prefill and decode streams, this partitions the
+    data axes between independent serving replicas. Each returned mesh owns
+    a disjoint device set; together they cover the input mesh.
+
+    Args:
+        mesh: a mesh whose last axis is ``model`` (the shapes
+            ``make_test_mesh``/``make_production_mesh`` build).
+
+    Returns:
+        ``dp`` meshes (``dp`` = product of the pod/data axis sizes), each
+        with axes ``("data", "model")`` and shape ``(1, tp)``.
+
+    Raises:
+        ValueError: if the mesh's trailing axis is not ``model``.
+    """
+    if mesh.axis_names[-1] != "model":
+        raise ValueError(
+            f"split_data_axis needs 'model' as the trailing axis, mesh has "
+            f"{tuple(mesh.axis_names)}")
+    model_size = mesh.shape["model"]
+    devs = mesh.devices.reshape(-1, model_size)
+    return tuple(Mesh(devs[i:i + 1], ("data", "model"))
+                 for i in range(devs.shape[0]))
+
+
 def split_duet_submeshes(mesh: Mesh, decode_chips: int):
     """Split the mesh's ``model`` axis into (prefill_mesh, decode_mesh).
 

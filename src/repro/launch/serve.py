@@ -21,6 +21,14 @@ Usage:
       --num-requests 8 --no-paged
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --reduced --tp 2 --num-requests 8
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --reduced --dp 2 \
+      --router-policy prefix --shared-prefix-len 32 --num-requests 8
+
+``--dp N`` serves N real engine replicas behind the cluster router
+(serving/router.py): requests are dispatched per --router-policy, each
+replica keeps its own KV pool/prefix cache/duet multiplexer, and the
+summary reports per-replica plus cluster-aggregate metrics.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ from repro.serving.async_engine import (AsyncDuetEngine, FinishEvent,
 from repro.serving.engine import DuetEngine, EngineConfig
 from repro.serving.kvcache import DEFAULT_PAGE_SIZE
 from repro.serving.request import synth_prompt_tokens
+from repro.serving.router import ROUTER_POLICIES, Router, RouterEvent
 from repro.serving.traces import TRACES, synth_trace
 
 
@@ -84,10 +93,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "visible devices (XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N on CPU)")
     ap.add_argument("--dp", type=int, default=1,
-                    help="mesh 'data' axis size — geometry only for now: "
-                         "batch-bearing arrays stay replicated, so dp>1 "
-                         "duplicates work rather than adding replica "
-                         "throughput (DP execution is a later scale item)")
+                    help="data-parallel replica count: dp>1 serves N real "
+                         "engine replicas behind the cluster router, each "
+                         "on its own TP submesh with its own params "
+                         "placement, paged KV pool and prefix cache; "
+                         "needs tp*dp visible devices (XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
+    ap.add_argument("--router-policy", choices=list(ROUTER_POLICIES),
+                    default="round-robin",
+                    help="dispatch policy for --dp > 1: round-robin "
+                         "(ClusterSim parity oracle), least-loaded "
+                         "(fewest outstanding tokens), or prefix "
+                         "(longest cached prompt prefix, tie-break on "
+                         "load)")
     # copy-on-write prefix caching (paged mode only; default: follow
     # --paged, so --no-paged alone never warns about a flag nobody passed)
     ap.add_argument("--prefix-cache", dest="prefix_cache",
@@ -191,20 +209,64 @@ def main(argv=None):
         temperature=args.temperature,
         tp=args.tp, units=max(1, args.tp))
 
+    def print_event(ev):
+        if isinstance(ev, TokenEvent):
+            print(json.dumps({"event": "token", "rid": ev.rid,
+                              "index": ev.index, "token": ev.token,
+                              "t": round(ev.t, 6)}))
+        elif isinstance(ev, FinishEvent):
+            print(json.dumps({"event": "finish", "rid": ev.rid,
+                              "reason": ev.reason,
+                              "n_tokens": ev.n_tokens,
+                              "t": round(ev.t, 6)}))
+        elif isinstance(ev, RouterEvent):
+            print(json.dumps({"event": "router", "rid": ev.rid,
+                              "replica": ev.replica, "policy": ev.policy,
+                              "matched_tokens": ev.matched_tokens,
+                              "outstanding": list(ev.outstanding),
+                              "t": round(ev.t, 6)}))
+
+    if args.dp > 1:
+        # cluster path: N real replicas behind the dispatch policy; the
+        # router drives sync or async replicas on the shared virtual clock
+        router = Router(model, params, ec, ctx=ctx,
+                        policy=args.router_policy,
+                        engine_cls=AsyncDuetEngine if args.stream
+                        else DuetEngine,
+                        seed=args.seed)
+        router.submit(reqs)
+        router.run(on_event=print_event if args.stream else None)
+        if args.stream:
+            print(json.dumps({
+                "event": "mesh", **router.ctx.describe(),
+                "collectives_per_iteration":
+                    router.ctx.collectives_per_iteration()}))
+            if args.paged:
+                pc = router.prefix_stats()
+                pc.pop("per_replica", None)
+                print(json.dumps({"event": "prefix_cache", **pc}))
+        out = router.summary()
+        if args.stream:
+            out["dispatch_stats"] = [dataclasses.asdict(e.dstats)
+                                     for e in router.engines]
+        out["mesh"] = router.ctx.describe()
+        out["collectives_per_iteration"] = \
+            router.ctx.collectives_per_iteration()
+        if args.paged:
+            # per-replica stats already live under out["per_replica"];
+            # keep the top-level block cluster-aggregate only
+            pc = router.prefix_stats()
+            pc.pop("per_replica", None)
+            out["prefix_cache"] = pc
+        print(json.dumps(out, indent=2))
+        return
+
     if args.stream:
         engine = AsyncDuetEngine(model, params, ec, seed=args.seed,
                                  ctx=ctx)
         engine.submit(reqs)   # open-loop: arrivals replay on the inbox
         for ev in engine.events():
-            if isinstance(ev, TokenEvent):
-                print(json.dumps({"event": "token", "rid": ev.rid,
-                                  "index": ev.index, "token": ev.token,
-                                  "t": round(ev.t, 6)}))
-            elif isinstance(ev, FinishEvent):
-                print(json.dumps({"event": "finish", "rid": ev.rid,
-                                  "reason": ev.reason,
-                                  "n_tokens": ev.n_tokens,
-                                  "t": round(ev.t, 6)}))
+            print_event(ev)
         # stream consumers can diagnose a sharded run from the log alone:
         # the executed mesh geometry + predicted collective count ride the
         # JSONL stream next to the prefix_cache outcome
@@ -224,6 +286,7 @@ def main(argv=None):
         engine.submit(reqs)
         metrics = engine.run()
         out = metrics.summary()
+    out["slo_attainment"] = metrics.slo_attainment(args.tbt_slo)
     out["duet_fraction"] = engine.mux.stats.duet_fraction
     out["iterations"] = engine.mux.stats.iterations
     out["mesh"] = engine.ctx.describe()

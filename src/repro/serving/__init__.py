@@ -14,6 +14,10 @@ from repro.serving.simulator import (ClusterSim, DisaggSim, InstanceSim,
 from repro.serving.engine import DuetEngine, EngineConfig
 from repro.serving.async_engine import (AsyncDuetEngine, DispatchStats,
                                         FinishEvent, TokenEvent)
+from repro.serving.router import (ROUTER_POLICIES, DispatchPolicy,
+                                  LeastLoadedPolicy, PrefixAffinityPolicy,
+                                  RoundRobinPolicy, Router, RouterEvent,
+                                  make_dispatch_policy)
 
 __all__ = [
     "AsyncDuetEngine", "DispatchStats", "FinishEvent", "TokenEvent",
@@ -25,4 +29,7 @@ __all__ = [
     "DisaggSim", "InstanceSim", "SimConfig", "kv_bytes_per_token",
     "kv_capacity_tokens", "make_baseline_instance", "make_duet_instance",
     "DuetEngine", "EngineConfig",
+    "ROUTER_POLICIES", "DispatchPolicy", "LeastLoadedPolicy",
+    "PrefixAffinityPolicy", "RoundRobinPolicy", "Router", "RouterEvent",
+    "make_dispatch_policy",
 ]

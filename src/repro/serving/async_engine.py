@@ -148,12 +148,10 @@ class AsyncDuetEngine(DuetEngine):
         self._donate = jax.default_backend() != "cpu"
         self._programs: dict = {}
         self.dstats = DispatchStats()
+        # _pending/_all/_epoch bookkeeping lives in the base engine; the
+        # async front-end adds only the thread-safe inbox feeding it
         self._inbox: deque = deque()
         self._lock = threading.Lock()
-        self._pending: List[Request] = []
-        self._all: List[Request] = []
-        self._epoch = 0          # first request index of the current run()
-        self._epoch_now = 0.0    # virtual clock when the last run() ended
         self._inflight: Optional[_Inflight] = None
 
     # ------------------------------------------------------------- streaming
@@ -234,32 +232,56 @@ class AsyncDuetEngine(DuetEngine):
     def events(self) -> Iterator[Event]:
         """Generator core: open-loop arrival replay plus streaming
         admission. Terminates when queues, pending arrivals and the inbox
-        are all empty (mirrors the synchronous run loop)."""
+        are all empty (mirrors the synchronous run loop).
+
+        Yields:
+            :class:`TokenEvent` / :class:`FinishEvent` in virtual-time
+            order as super-iterations retire.
+        """
         while True:
-            self._ingest()
-            self.state.admit_arrivals(self._pending, self.now)
-            for r in self._admit_waiting():
-                yield self._finish_event(r)
-            plan = self._plan()
-            if not plan.is_idle:
-                yield from self._step(plan)
-                continue
-            # idle: flush the pipeline, then wait for arrivals or stop
-            yield from self._drain()
-            self._ingest()
-            if self._pending:
-                self.now = max(self.now, self._pending[0].arrival)
-                continue
-            if self.state.waiting:
-                # nothing runs and the policy still refuses every waiting
-                # request: no completion can ever free pages
-                for r in list(self.state.waiting):
-                    self.state.waiting.remove(r)
-                    self._reject(r, "kv_admission_starved")
-                    yield self._finish_event(r)
-                continue
-            break
-        yield from self._drain()
+            evs, progressed = self._tick()
+            yield from evs
+            if not progressed:
+                break
+        yield from self._drain()   # safety net; the idle tick drained
+
+    def _tick(self):
+        """One pass of the async serving loop (shared ``(events,
+        progressed)`` contract with the base engine, so ``service_until``
+        can drive either engine class)."""
+        evs: List[Event] = []
+        self._ingest()
+        self.state.admit_arrivals(self._pending, self.now)
+        for r in self._admit_waiting():
+            evs.append(self._finish_event(r))
+        plan = self._plan()
+        if not plan.is_idle:
+            evs.extend(self._step(plan))
+            return evs, True
+        # idle: flush the pipeline, then wait for arrivals or stop
+        evs.extend(self._drain())
+        self._ingest()
+        if self._pending:
+            self.now = max(self.now, self._pending[0].arrival)
+            return evs, True
+        if self.state.waiting:
+            # nothing runs and the policy still refuses every waiting
+            # request: no completion can ever free pages
+            for r in list(self.state.waiting):
+                self.state.waiting.remove(r)
+                self._reject(r, "kv_admission_starved")
+                evs.append(self._finish_event(r))
+            return evs, True
+        return evs, False
+
+    def outstanding_tokens(self) -> int:
+        """Outstanding-work signal for the cluster router; extends the
+        base count with requests still sitting in the thread-safe inbox."""
+        with self._lock:
+            inbox = list(self._inbox)
+        return super().outstanding_tokens() + sum(
+            r.remaining_prompt + max(0, r.output_len - r.generated)
+            for r in inbox)
 
     # -------------------------------------------------------- super-iteration
     def _step(self, plan: IterationPlan) -> Iterator[Event]:

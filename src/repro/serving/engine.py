@@ -3,12 +3,13 @@ adaptive duet multiplexing, paged-KV execution, and interruption-free
 look-ahead decode (fused k-step jitted programs, §4.3).
 
 Execution vs time accounting: the engine *computes real tokens* with the JAX
-model (greedy/temperature sampling). Because this container is CPU-only while
-the serving target is TPU v5e, the engine clock advances by the
-attention-aware roofline prediction — the same oracle the paper's scheduler
+model (greedy/temperature sampling) on whatever devices the session's mesh
+provides — host CPU devices in tests/CI, TPU chips on the serving target.
+The engine clock deliberately advances by the attention-aware roofline
+prediction rather than wall time — the same oracle the paper's scheduler
 uses and validates (Fig. 8; reproduced against real JAX wall-time in
-benchmarks/fig8). Metrics (TTFT/TBT/throughput) are therefore TPU-scale while
-every generated token is real.
+benchmarks/fig8) — so metrics (TTFT/TBT/throughput) are TPU-v5e-scale and
+reproducible across hosts while every generated token is real.
 
 KV memory (DESIGN.md §3): by default attention KV lives in per-layer device
 page pools (PagedAttention layout) addressed through per-request block
@@ -33,9 +34,10 @@ token-identical to it (tests/test_sharded_serving.py).
 from __future__ import annotations
 
 import copy
+import math
 import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -177,6 +179,14 @@ class DuetEngine:
         self.slot_pos = np.zeros(engine_cfg.max_slots, np.int32)
         self.slot_last_token = np.zeros(engine_cfg.max_slots, np.int32)
         self.finished: List[Request] = []
+        # submission queue + epoch bookkeeping: ``submit`` accumulates, the
+        # serving loop consumes, and ``run`` reports metrics over the
+        # requests ingested since the previous ``run`` (so a reused or
+        # router-driven engine never double-counts)
+        self._pending: List[Request] = []
+        self._all: List[Request] = []
+        self._epoch = 0
+        self._epoch_now = 0.0
         self._decode_fns: Dict[int, callable] = {}
         # prefill programs carry explicit in/out shardings: params per the
         # TP rules, pools sharded on the KV-head axis, everything host-
@@ -233,10 +243,31 @@ class DuetEngine:
             r.prompt_tokens = synth_prompt_tokens(
                 r.rid, self.cfg.vocab_size, r.prompt_len)
 
-    def submit(self, requests: List[Request]):
-        for r in requests:
+    def submit(self, requests: Union[Request, Sequence[Request]],
+               at: Optional[float] = None):
+        """Enqueue requests for serving.
+
+        Calls accumulate: a cluster router (or any incremental driver)
+        submits requests one at a time as it routes them, interleaved with
+        :meth:`service_until` calls.
+
+        Args:
+            requests: one :class:`Request` or a sequence of them. Trace
+                requests carrying lengths only get deterministic
+                rid-derived prompt tokens materialised here.
+            at: optional arrival-time override applied to every submitted
+                request (pass ``engine.now`` for "now").
+        """
+        if isinstance(requests, Request):
+            requests = [requests]
+        reqs = list(requests)
+        for r in reqs:
             self._materialize_prompt(r)
-        self._pending = sorted(requests, key=lambda r: r.arrival)
+            if at is not None:
+                r.arrival = at
+        self._pending.extend(reqs)
+        self._pending.sort(key=lambda r: r.arrival)
+        self._all.extend(reqs)
 
     # --------------------------------------------------- admission / eviction
     def _admit_waiting(self) -> List[Request]:
@@ -488,30 +519,81 @@ class DuetEngine:
 
     # ------------------------------------------------------------- run loop
     def run(self) -> ServingMetrics:
-        pending = list(self._pending)
-        all_reqs = list(pending)
-        while pending or self.state.waiting or self.state.running \
-                or self.state.prefilling:
-            self.state.admit_arrivals(pending, self.now)
-            self._admit_waiting()
-            # slot-less requests stay queued in `waiting`; _plan() exposes
-            # only slot-holders to the policy, the rest wait FCFS.
-            plan = self._plan()
-            if plan.is_idle:
-                if pending:
-                    self.now = max(self.now, pending[0].arrival)
-                    continue
-                if self.state.waiting:
-                    # nothing runs, nothing is pending, and the policy still
-                    # refuses every waiting request: no completion can ever
-                    # free pages, so these can never start.
-                    for r in list(self.state.waiting):
-                        self.state.waiting.remove(r)
-                        self._reject(r, "kv_admission_starved")
-                    continue
+        """Serve every submitted request to a terminal state.
+
+        Returns:
+            :class:`ServingMetrics` over the requests ingested since the
+            previous ``run`` (epoch-scoped, so a reused engine's
+            throughput numbers are not diluted by earlier epochs).
+        """
+        self.service_until(math.inf)
+        reqs = self._all[self._epoch:]
+        self._epoch = len(self._all)
+        duration, self._epoch_now = self.now - self._epoch_now, self.now
+        return ServingMetrics(requests=reqs, duration=duration)
+
+    def service_until(self, t: float) -> List:
+        """Advance the engine's virtual clock up to time ``t``.
+
+        Runs serving-loop iterations while the engine has live work and
+        ``now < t`` (an in-flight iteration may overshoot ``t`` — it was
+        already committed when ``t`` passed). This is the cluster router's
+        driver hook: replicas are stepped in lockstep to each arrival so
+        dispatch decisions observe real replica state at route time.
+
+        Args:
+            t: virtual-time horizon (``math.inf`` = serve to completion).
+
+        Returns:
+            Serving events produced while advancing — always ``[]`` for
+            the synchronous engine; the async engine returns its
+            token/finish events.
+        """
+        out: List = []
+        while self.now < t:
+            evs, progressed = self._tick()
+            out.extend(evs)
+            if not progressed:
                 break
+        return out
+
+    def _tick(self) -> Tuple[List, bool]:
+        """One serving-loop pass: admit arrivals, plan, execute one
+        iteration (or jump the clock to the next arrival, or reject
+        starved requests). Returns ``(events, progressed)`` —
+        ``progressed=False`` means nothing can advance without new
+        submissions."""
+        self.state.admit_arrivals(self._pending, self.now)
+        self._admit_waiting()
+        # slot-less requests stay queued in `waiting`; _plan() exposes
+        # only slot-holders to the policy, the rest wait FCFS.
+        plan = self._plan()
+        if not plan.is_idle:
             self._execute(plan)
-        return ServingMetrics(requests=all_reqs, duration=self.now)
+            return [], True
+        if self._pending:
+            self.now = max(self.now, self._pending[0].arrival)
+            return [], True
+        if self.state.waiting:
+            # nothing runs, nothing is pending, and the policy still
+            # refuses every waiting request: no completion can ever
+            # free pages, so these can never start.
+            for r in list(self.state.waiting):
+                self.state.waiting.remove(r)
+                self._reject(r, "kv_admission_starved")
+            return [], True
+        return [], False
+
+    def outstanding_tokens(self) -> int:
+        """Total tokens of work this replica still owes: the remaining
+        prefill + decode tokens of every resident request
+        (``QueueState.outstanding_loads``) plus submitted-but-unarrived
+        requests. The cluster router's least-outstanding-tokens and
+        prefix-affinity tie-break signal."""
+        n = sum(l.q for l in self.state.outstanding_loads())
+        n += sum(r.remaining_prompt + max(0, r.output_len - r.generated)
+                 for r in self._pending)
+        return n
 
     def _plan(self) -> IterationPlan:
         # only slot-admitted requests are schedulable

@@ -44,6 +44,24 @@ class PagePoolConfig:
     page_size: int = DEFAULT_PAGE_SIZE
 
 
+def block_keys(token_ids, page_size: int) -> List[bytes]:
+    """Chained SHA-256 digests, one per *full* page of ``token_ids`` —
+    digest i commits to every token in blocks 0..i, so a match at block
+    i implies the whole prefix matches. A cryptographic digest (not
+    Python's 64-bit ``hash``) keys the index: a collision would map a
+    wrong page into a block table and silently serve wrong KV. Shared by
+    the live manager and the cluster simulator's routing-signal index —
+    one hashing convention, so sim and real prefix affinity agree."""
+    ids = np.asarray(token_ids, dtype=np.int64)
+    keys: List[bytes] = []
+    prev = b""
+    for i in range(len(ids) // page_size):
+        blk = ids[i * page_size:(i + 1) * page_size].tobytes()
+        prev = hashlib.sha256(prev + blk).digest()
+        keys.append(prev)
+    return keys
+
+
 @dataclass
 class PrefixCacheStats:
     lookups: int = 0             # lock_prefix calls against the index
@@ -125,15 +143,21 @@ class PagedKVCacheManager:
         return d
 
     def pages_needed(self, rid: int, new_tokens: int) -> int:
+        """Extra pages ``rid``'s table needs to hold ``new_tokens`` more
+        tokens (0 when the current tail page has room)."""
         cur = self._lengths.get(rid, 0)
         cur_pages = len(self._tables.get(rid, []))
         need_pages = -(-(cur + new_tokens) // self.page_size)
         return max(0, need_pages - cur_pages)
 
     def can_allocate(self, rid: int, new_tokens: int) -> bool:
+        """Whether :meth:`allocate` of ``new_tokens`` for ``rid`` would
+        succeed against the current free pool."""
         return self.pages_needed(rid, new_tokens) <= self.free_pages
 
     def can_admit(self, requests_new_tokens: Dict[int, int]) -> bool:
+        """Whether the combined footprint ``{rid: new_tokens}`` fits the
+        free pool — the policies' admission check."""
         need = sum(self.pages_needed(r, n)
                    for r, n in requests_new_tokens.items())
         return need <= self.free_pages
@@ -208,31 +232,29 @@ class PagedKVCacheManager:
         self._lengths[rid] = new_len
 
     def free(self, rid: int):
+        """Release every page of ``rid``'s table (retire/preempt/reject).
+        Dereferenced pages return to the free list, except cached prefix
+        pages which move to the LRU and stay servable until evicted.
+        Idempotent — an unknown ``rid`` is a no-op."""
         for p in self._tables.pop(rid, []):
             self._release_page(p)
         self._lengths.pop(rid, None)
 
     # ------------------------------------------------------ prefix caching
     def _block_keys(self, token_ids) -> List[bytes]:
-        """Chained SHA-256 digests, one per *full* page of ``token_ids`` —
-        digest i commits to every token in blocks 0..i, so a match at block
-        i implies the whole prefix matches. A cryptographic digest (not
-        Python's 64-bit ``hash``) keys the index: a collision would map a
-        wrong page into a block table and silently serve wrong KV."""
-        ids = np.asarray(token_ids, dtype=np.int64)
-        keys: List[bytes] = []
-        prev = b""
-        for i in range(len(ids) // self.page_size):
-            blk = ids[i * self.page_size:(i + 1) * self.page_size].tobytes()
-            prev = hashlib.sha256(prev + blk).digest()
-            keys.append(prev)
-        return keys
+        return block_keys(token_ids, self.page_size)
 
     def match_prefix(self, token_ids) -> Tuple[int, List[int]]:
         """Longest cached prefix of ``token_ids`` at page granularity.
         Returns (matched_tokens, pages); does not take references."""
+        return self.match_prefix_keys(self._block_keys(token_ids))
+
+    def match_prefix_keys(self, keys: List[bytes]) -> Tuple[int, List[int]]:
+        """:meth:`match_prefix` against precomputed chain digests
+        (``block_keys``) — the cluster router hashes a prompt once and
+        probes every replica's index with the same keys."""
         pages: List[int] = []
-        for key in self._block_keys(token_ids):
+        for key in keys:
             page = self._hash_index.get(key)
             if page is None:
                 break
@@ -315,9 +337,13 @@ class PagedKVCacheManager:
         return [(old, new)]
 
     def page_table(self, rid: int) -> List[int]:
+        """Copy of ``rid``'s block table (page ids, in token order);
+        empty for an unknown ``rid``."""
         return list(self._tables.get(rid, []))
 
     def length(self, rid: int) -> int:
+        """Committed token count of ``rid`` (reserved-but-unwritten
+        look-ahead slots excluded)."""
         return self._lengths.get(rid, 0)
 
     def padded_tables(self, rids: List[int], max_pages: int) -> np.ndarray:

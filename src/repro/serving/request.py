@@ -120,6 +120,29 @@ class ServingMetrics:
     requests: List[Request] = field(default_factory=list)
     duration: float = 0.0
 
+    def slo_attainment(self, tbt_slo: float,
+                       ttft_slo: Optional[float] = None) -> float:
+        """Fraction of requests that finished AND met the latency SLOs.
+
+        A request attains the SLO when every one of its time-between-token
+        samples is ≤ ``tbt_slo`` and (when ``ttft_slo`` is given) its TTFT
+        is ≤ ``ttft_slo``. Rejected/unfinished requests count against
+        attainment — the cluster-level goodput denominator is every
+        submitted request. Returns NaN for an empty request set.
+        """
+        if not self.requests:
+            return float("nan")
+        ok = 0
+        for r in self.requests:
+            if r.finish_time is None or r.phase == Phase.REJECTED:
+                continue
+            if any(t > tbt_slo for t in r.tbt_samples()):
+                continue
+            if ttft_slo is not None and (r.ttft() or 0.0) > ttft_slo:
+                continue
+            ok += 1
+        return ok / len(self.requests)
+
     def summary(self) -> dict:
         finished = [r for r in self.requests if r.finish_time is not None]
         ttfts = [r.ttft() for r in finished if r.ttft() is not None]

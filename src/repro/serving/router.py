@@ -1,0 +1,407 @@
+"""Cluster router: data-parallel engine replicas behind pluggable dispatch.
+
+This closes the sim/real gap for the paper's cluster evaluations (Fig. 2,
+Table 3): ``serve.py --dp N`` serves **N real engine replicas**, each owning
+a disjoint TP submesh carved from the mesh's data axes
+(``DeviceContext.split_replicas``), its own params placement, paged KV pool,
+prefix cache and :class:`~repro.core.multiplexer.AdaptiveMultiplexer` — the
+duet decision stays replica-local (Nexus-style intra-GPU multiplexing),
+while the router decides only *which* replica serves each request.
+
+Dispatch policies (DistServe motivates going beyond blind round-robin):
+
+* ``round-robin``       — ClusterSim parity / oracle baseline: request *i*
+                          goes to replica ``i % N`` regardless of state.
+* ``least-loaded``      — fewest outstanding tokens
+                          (:meth:`DuetEngine.outstanding_tokens`), tie-break
+                          on dispatch count then replica index.
+* ``prefix``            — prefix-affinity: route to the replica whose
+                          block-hash index has the longest cached prefix of
+                          the request's prompt (``kv_mgr.match_prefix``),
+                          tie-break on load; falls back to least-loaded when
+                          no replica has cached pages. Turns the per-replica
+                          prefix caches (PR 3) into a routing signal: a
+                          shared-system-prompt workload concentrates on warm
+                          replicas instead of re-prefilling everywhere.
+
+Time model: replicas advance on the same virtual TPU clock the engines use.
+The router steps every replica to each request's arrival time
+(:meth:`DuetEngine.service_until`) *before* routing it, so load and
+prefix-index observations are the true replica state at route time — the
+same discrete-event semantics ``ClusterSim`` implements over
+:class:`InstanceSim` replicas, which keeps sim-vs-real comparisons
+apples-to-apples (the sim-parity contract, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Union
+
+from repro.core.device import DeviceContext
+from repro.core.roofline import HardwareSpec, TPU_V5E
+from repro.models.transformer import Model
+from repro.serving.engine import DuetEngine, EngineConfig
+from repro.serving.request import Request, ServingMetrics
+
+ROUTER_POLICIES = ("round-robin", "least-loaded", "prefix")
+
+
+# ------------------------------------------------------------------ events
+@dataclass(frozen=True)
+class RouterEvent:
+    """One dispatch decision, streamed next to the token events."""
+    rid: int
+    replica: int
+    policy: str
+    matched_tokens: int          # cached-prefix tokens on the chosen replica
+    outstanding: tuple           # per-replica outstanding tokens at route time
+    t: float                     # virtual-clock route (= arrival) time
+
+
+# ---------------------------------------------------------------- policies
+class DispatchPolicy:
+    """Strategy interface: pick a replica for one request.
+
+    Implementations observe replicas through *views* exposing
+    ``outstanding_tokens() -> int``, ``page_size`` and
+    ``match_keys(keys) -> int`` (longest cached prefix against
+    precomputed ``kvcache.block_keys`` chain digests — the prompt is
+    hashed once per dispatch, not once per replica). Both the real
+    :class:`Router` (over live engines) and ``ClusterSim`` (over
+    simulated instances) provide them, so one policy implementation
+    serves both execution paths.
+    """
+
+    name = "?"
+
+    def __init__(self):
+        self._dispatched: List[int] = []
+
+    def _counts(self, n: int) -> List[int]:
+        if len(self._dispatched) < n:
+            self._dispatched += [0] * (n - len(self._dispatched))
+        return self._dispatched
+
+    def _least_loaded(self, views, candidates: Sequence[int]) -> int:
+        """Fewest outstanding tokens; ties broken by fewest dispatches so
+        far (so an idle cluster still spreads load), then replica index."""
+        counts = self._counts(len(views))
+        return min(candidates,
+                   key=lambda i: (views[i].outstanding_tokens(),
+                                  counts[i], i))
+
+    def choose(self, views, token_ids, keys=None) -> tuple:
+        """Route one request.
+
+        Args:
+            views: per-replica state views (see class docstring).
+            token_ids: the request's prompt token ids, or ``None`` when the
+                trace carries lengths only (prefix matching then degrades
+                to the load-based fallback).
+            keys: optional precomputed ``block_keys`` chain digests of
+                ``token_ids`` — a caller that needs the digests itself
+                (``ClusterSim``'s hit modeling) passes them so the prompt
+                is hashed exactly once per dispatch.
+
+        Returns:
+            ``(replica_index, matched_tokens)`` — ``matched_tokens`` is the
+            cached-prefix length on the chosen replica (0 for non-prefix
+            policies).
+        """
+        raise NotImplementedError
+
+    def record(self, idx: int):
+        """Bookkeeping hook: the caller confirms the dispatch."""
+        self._counts(idx + 1)
+        self._dispatched[idx] += 1
+
+
+class RoundRobinPolicy(DispatchPolicy):
+    """Blind cyclic dispatch — the ClusterSim parity oracle."""
+    name = "round-robin"
+
+    def __init__(self):
+        super().__init__()
+        self._next = 0
+
+    def choose(self, views, token_ids, keys=None) -> tuple:
+        idx = self._next % len(views)
+        self._next += 1
+        return idx, 0
+
+
+class LeastLoadedPolicy(DispatchPolicy):
+    """Least-outstanding-tokens dispatch."""
+    name = "least-loaded"
+
+    def choose(self, views, token_ids, keys=None) -> tuple:
+        return self._least_loaded(views, range(len(views))), 0
+
+
+class PrefixAffinityPolicy(DispatchPolicy):
+    """Longest-cached-prefix dispatch, tie-break on load."""
+    name = "prefix"
+
+    def choose(self, views, token_ids, keys=None) -> tuple:
+        matched = [0] * len(views)
+        if token_ids is not None and views:
+            # hash the prompt ONCE (replicas share the engine page size),
+            # then probe every replica's index with the same digests
+            if keys is None:
+                from repro.serving.kvcache import block_keys
+                keys = block_keys(token_ids, views[0].page_size)
+            matched = [v.match_keys(keys) for v in views]
+        best = max(matched)
+        if best <= 0:
+            return self._least_loaded(views, range(len(views))), 0
+        warm = [i for i, m in enumerate(matched) if m == best]
+        return self._least_loaded(views, warm), best
+
+
+_POLICY_CLASSES = {
+    "round-robin": RoundRobinPolicy,
+    "least-loaded": LeastLoadedPolicy,
+    "prefix": PrefixAffinityPolicy,
+}
+
+
+def make_dispatch_policy(name: str) -> DispatchPolicy:
+    """Instantiate a dispatch policy by CLI name.
+
+    Args:
+        name: one of :data:`ROUTER_POLICIES`.
+
+    Raises:
+        ValueError: unknown policy name.
+    """
+    try:
+        return _POLICY_CLASSES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown router policy {name!r}; choose from "
+            f"{ROUTER_POLICIES}") from None
+
+
+# ------------------------------------------------------------ replica view
+class _EngineView:
+    """Routing-signal adapter over one live engine replica."""
+
+    def __init__(self, engine: DuetEngine):
+        self.engine = engine
+        self.page_size = engine.kv_mgr.page_size
+
+    def outstanding_tokens(self) -> int:
+        return self.engine.outstanding_tokens()
+
+    def match_keys(self, keys) -> int:
+        if not self.engine.paged:
+            return 0
+        return self.engine.kv_mgr.match_prefix_keys(keys)[0]
+
+
+# ------------------------------------------------------------------ router
+class Router:
+    """N real engine replicas behind a dispatch policy.
+
+    Builds one engine per replica submesh — each places its own params,
+    owns its paged KV pool/prefix cache and makes its own duet decisions —
+    then replays the submitted trace: every request is routed at its
+    arrival time against live replica state, and the replicas are driven
+    to completion on the shared virtual clock.
+    """
+
+    def __init__(self, model: Model, params, engine_cfg: EngineConfig, *,
+                 ctx: Optional[DeviceContext] = None,
+                 replicas: Optional[int] = None,
+                 policy: Union[str, DispatchPolicy] = "round-robin",
+                 engine_cls=DuetEngine,
+                 hw: HardwareSpec = TPU_V5E, seed: int = 0):
+        """Args:
+            model / params / engine_cfg / hw / seed: forwarded to every
+                replica engine (each replica re-places ``params`` for its
+                own submesh, so pass host or replicated values).
+            ctx: cluster device context; its data axes are carved into one
+                TP submesh per replica. Defaults to a ``(data=replicas,
+                model=engine_cfg.tp)`` test mesh.
+            replicas: replica count; defaults to ``ctx.dp`` (or 2 when no
+                context is given).
+            policy: dispatch policy name (:data:`ROUTER_POLICIES`) or a
+                :class:`DispatchPolicy` instance.
+            engine_cls: ``DuetEngine`` (default) or ``AsyncDuetEngine``
+                (streaming token events through :meth:`events`).
+
+        Raises:
+            ValueError: replica count contradicts ``ctx.dp``, or fewer
+                than one replica requested.
+        """
+        cfg = model.cfg
+        if ctx is None:
+            n = replicas or 2
+            ctx = DeviceContext.for_shape(cfg, tp=max(1, engine_cfg.tp),
+                                          dp=n)
+        if replicas is None:
+            replicas = ctx.dp
+        if replicas < 1:
+            raise ValueError(f"need >= 1 replica, got {replicas}")
+        if replicas != ctx.dp:
+            raise ValueError(
+                f"replicas={replicas} contradicts the context's data axes "
+                f"(dp={ctx.dp}); pass one geometry")
+        self.ctx = ctx
+        self.cfg = cfg
+        self.ec = engine_cfg
+        self.policy = policy if isinstance(policy, DispatchPolicy) \
+            else make_dispatch_policy(policy)
+        self.engines: List[DuetEngine] = [
+            engine_cls(model, params, engine_cfg, hw=hw, seed=seed, ctx=c)
+            for c in ctx.split_replicas()]
+        self._views = [_EngineView(e) for e in self.engines]
+        self._pending: List[Request] = []
+        self.decisions: List[RouterEvent] = []
+        self._metrics: Optional[ServingMetrics] = None
+        self._replica_metrics: List[ServingMetrics] = []
+
+    # ------------------------------------------------------------- frontend
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def submit(self, requests: Union[Request, Sequence[Request]]):
+        """Enqueue requests for routed serving.
+
+        Prompt tokens are materialised up front (the prefix-affinity
+        policy hashes them at route time). Routing itself happens inside
+        :meth:`events`/:meth:`run`, at each request's arrival on the
+        virtual clock. Callable mid-run from an event callback (the
+        serving loop re-checks the queue); unlike the async engines'
+        inbox, ``submit`` is NOT thread-safe — feed a cluster from the
+        driving thread.
+        """
+        if isinstance(requests, Request):
+            requests = [requests]
+        reqs = list(requests)
+        for r in reqs:
+            self.engines[0]._materialize_prompt(r)
+        self._pending.extend(reqs)
+        self._pending.sort(key=lambda r: r.arrival)
+
+    def events(self) -> Iterator:
+        """Serve the submitted trace, yielding events as they happen.
+
+        Yields:
+            One :class:`RouterEvent` per dispatch decision, interleaved
+            with the replicas' own serving events (token/finish events
+            when the replicas are ``AsyncDuetEngine``; synchronous
+            replicas emit none). Replica events are yielded in per-replica
+            virtual-time order; events of different replicas may arrive
+            slightly out of global order (each carries its ``t``).
+        """
+        while True:
+            while self._pending:
+                r = self._pending.pop(0)
+                # advance every replica to the arrival so dispatch
+                # observes true replica state (in-flight work, cache
+                # contents) at route time
+                for eng in self.engines:
+                    yield from eng.service_until(r.arrival)
+                yield self._route(r)
+            for eng in self.engines:
+                yield from eng.service_until(math.inf)
+            # an event callback may have submitted more work during the
+            # drain — loop back instead of dropping it
+            if not self._pending:
+                break
+
+    def _route(self, r: Request) -> RouterEvent:
+        idx, matched = self.policy.choose(self._views,
+                                          r.prompt_tokens)
+        outstanding = tuple(v.outstanding_tokens() for v in self._views)
+        self.policy.record(idx)
+        self.engines[idx].submit(r)
+        ev = RouterEvent(rid=r.rid, replica=idx, policy=self.policy.name,
+                         matched_tokens=matched, outstanding=outstanding,
+                         t=r.arrival)
+        self.decisions.append(ev)
+        return ev
+
+    def run(self, on_event=None) -> ServingMetrics:
+        """Route + serve every submitted request to a terminal state.
+
+        Args:
+            on_event: optional callback receiving every event
+                :meth:`events` would yield.
+
+        Returns:
+            Cluster-merged :class:`ServingMetrics` (requests from all
+            replicas; duration = the slowest replica's span).
+        """
+        for ev in self.events():
+            if on_event is not None:
+                on_event(ev)
+        merged = ServingMetrics()
+        self._replica_metrics = []
+        for eng in self.engines:
+            m = eng.run()   # drained by events(); collects epoch metrics
+            self._replica_metrics.append(m)
+            merged.requests.extend(m.requests)
+            merged.duration = max(merged.duration, m.duration)
+        self._metrics = merged
+        return merged
+
+    # ------------------------------------------------------------ reporting
+    def prefix_stats(self) -> dict:
+        """Cluster-aggregated prefix-cache stats: counters summed across
+        replicas, ``hit_rate`` recomputed over the cluster totals, and
+        ``per_replica`` carrying each replica's own view."""
+        per = [e.kv_mgr.prefix_stats() for e in self.engines]
+        agg = {k: sum(p[k] for p in per)
+               for k in ("lookups", "lookup_tokens", "hit_requests",
+                         "hit_tokens", "cow_copies", "evictions",
+                         "pages_allocated", "cached_pages", "shared_pages")}
+        agg["hit_rate"] = agg["hit_tokens"] / max(1, agg["lookup_tokens"])
+        agg["enabled"] = any(p["enabled"] for p in per)
+        agg["per_replica"] = per
+        return agg
+
+    def router_summary(self) -> dict:
+        """Dispatch accounting: policy, per-replica request counts, and
+        how many prompt tokens prefix-affinity found cached at route
+        time."""
+        counts = [0] * self.n_replicas
+        for d in self.decisions:
+            counts[d.replica] += 1
+        return {
+            "policy": self.policy.name,
+            "replicas": self.n_replicas,
+            "dispatch_counts": counts,
+            "routed_requests": len(self.decisions),
+            "prefix_routed_tokens": sum(d.matched_tokens
+                                        for d in self.decisions),
+        }
+
+    def summary(self) -> dict:
+        """Cluster-level summary: merged TTFT/TBT/throughput plus SLO
+        attainment, the router block, and per-replica summaries. Call
+        after :meth:`run`.
+
+        Raises:
+            RuntimeError: ``run`` has not completed yet.
+        """
+        if self._metrics is None:
+            raise RuntimeError("Router.summary() before run()")
+        out = self._metrics.summary()
+        out["slo_attainment"] = self._metrics.slo_attainment(self.ec.tbt_slo)
+        out["router"] = self.router_summary()
+        out["per_replica"] = []
+        for i, (eng, m) in enumerate(zip(self.engines,
+                                         self._replica_metrics)):
+            rep = {"replica": i, **m.summary(),
+                   "slo_attainment": m.slo_attainment(self.ec.tbt_slo),
+                   "duet_fraction": eng.mux.stats.duet_fraction,
+                   "iterations": eng.mux.stats.iterations,
+                   "mesh": eng.ctx.describe()}
+            if self.ec.paged:
+                rep["prefix_cache"] = eng.kv_mgr.prefix_stats()
+            out["per_replica"].append(rep)
+        return out

@@ -52,6 +52,21 @@ class IterationPlan:
         return pre, dec
 
 
+def request_work(r: Request) -> RequestLoad:
+    """Remaining work of one request as a :class:`RequestLoad`.
+
+    ``q`` counts every token still to compute — the uncomputed prefill
+    suffix plus the ungenerated outputs — and ``c`` the context already
+    resident, so a cluster router can price a replica's backlog with the
+    same load vocabulary the roofline/multiplexer plan with.
+    """
+    remaining_out = max(0, r.output_len - r.generated)
+    if r.phase in (Phase.WAITING, Phase.PREFILL):
+        return RequestLoad(q=r.remaining_prompt + remaining_out,
+                           c=r.prefilled, phase="prefill")
+    return RequestLoad(q=remaining_out, c=r.context_len, phase="decode")
+
+
 @dataclass
 class QueueState:
     waiting: List[Request] = field(default_factory=list)
@@ -63,6 +78,14 @@ class QueueState:
             r = requests.pop(0)
             r.phase = Phase.WAITING
             self.waiting.append(r)
+
+    def outstanding_loads(self) -> List[RequestLoad]:
+        """Per-request remaining work across every resident queue
+        (waiting, prefilling, running), for cluster-level routing — see
+        :func:`request_work`."""
+        return [request_work(r)
+                for q in (self.waiting, self.prefilling, self.running)
+                for r in q]
 
 
 class BasePolicy:

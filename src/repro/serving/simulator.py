@@ -11,7 +11,11 @@ against real JAX execution).
 
 Instance kinds:
   * InstanceSim   — one replica (aggregated or duet scheduling)
-  * ClusterSim    — N replicas, round-robin dispatch (Fig. 2 Agg-vLLM setup)
+  * ClusterSim    — N replicas behind the same pluggable dispatch policies
+                    as the real ``serving.router.Router`` (round-robin =
+                    the Fig. 2 Agg-vLLM setup; least-loaded and
+                    prefix-affinity keep sim-vs-real deltas
+                    apples-to-apples — DESIGN.md §8)
   * DisaggSim     — 1P+1D phase disaggregation with KV-transfer delay
                     (Fig. 2 Disagg-Dynamo setup, Obs. 3)
 """
@@ -19,14 +23,17 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
 from repro.configs.base import ArchConfig
 from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import (HardwareSpec, RequestLoad, RooflineModel,
                                  TPU_V5E)
-from repro.serving.kvcache import PagedKVCacheManager, PagePoolConfig
+from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, PagedKVCacheManager,
+                                   PagePoolConfig, block_keys)
 from repro.serving.request import Phase, Request, ServingMetrics
+from repro.serving.router import (DispatchPolicy, RouterEvent,
+                                  make_dispatch_policy)
 from repro.serving.scheduler import (BasePolicy, ChunkedPrefillPolicy,
                                      DuetPolicy, IterationPlan,
                                      PrefillFirstPolicy, QueueState)
@@ -98,6 +105,10 @@ class InstanceSim:
         self.state = QueueState()
         self.now = 0.0
         self.finished: List[Request] = []
+        self._queue: List[Request] = []   # submitted, not yet arrived
+        self._all: List[Request] = []
+        self._epoch = 0          # first request index of the current run()
+        self._epoch_now = 0.0    # virtual clock when the last run() ended
         self.record_trace = record_trace
         self.trace: List[dict] = []   # per-iteration timeline (paper Fig. 10)
 
@@ -184,39 +195,182 @@ class InstanceSim:
                     self.state.running.append(r)
 
     # ------------------------------------------------------------------
+    def submit(self, requests: Union[Request, Sequence[Request]]):
+        """Enqueue requests (incremental — the cluster router's driver
+        hook; mirrors ``DuetEngine.submit``)."""
+        if isinstance(requests, Request):
+            requests = [requests]
+        reqs = list(requests)
+        self._queue.extend(reqs)
+        self._queue.sort(key=lambda r: r.arrival)
+        self._all.extend(reqs)
+
+    def _tick(self) -> bool:
+        """One simulation step. Returns False when nothing can advance
+        without new submissions (mirrors the engines' tick contract)."""
+        self.state.admit_arrivals(self._queue, self.now)
+        plan = self.policy.schedule(self.state)
+        if plan.is_idle:
+            if self._queue:
+                self.now = max(self.now, self._queue[0].arrival)
+                return True
+            return False
+        if plan.mode == "duet":
+            self._apply_duet(plan)
+        else:
+            self._apply_aggregated(plan)
+        return True
+
+    def service_until(self, t: float):
+        """Advance the replica's virtual clock up to ``min(t, horizon)``
+        (the same lockstep driver hook the real engines expose)."""
+        t = min(t, self.sim.horizon)
+        while self.now < t and self._tick():
+            pass
+
+    def outstanding_tokens(self) -> int:
+        """Remaining prefill+decode tokens across resident and queued
+        requests — the routing load signal (see ``scheduler.request_work``)."""
+        n = sum(load.q for load in self.state.outstanding_loads())
+        n += sum(r.remaining_prompt + max(0, r.output_len - r.generated)
+                 for r in self._queue)
+        return n
+
+    def metrics(self) -> ServingMetrics:
+        """Full-lifetime view: every request ever submitted, clock as
+        duration (what ``ClusterSim`` merges after a single drain)."""
+        return ServingMetrics(requests=list(self._all), duration=self.now)
+
     def run(self, requests: List[Request]) -> ServingMetrics:
-        pending = sorted(copy.deepcopy(requests), key=lambda r: r.arrival)
-        all_reqs = list(pending)
-        while ((pending or self.state.waiting or self.state.running
-                or self.state.prefilling) and self.now < self.sim.horizon):
-            self.state.admit_arrivals(pending, self.now)
-            plan = self.policy.schedule(self.state)
-            if plan.is_idle:
-                if pending:
-                    self.now = max(self.now, pending[0].arrival)
-                    continue
-                break
-            if plan.mode == "duet":
-                self._apply_duet(plan)
-            else:
-                self._apply_aggregated(plan)
-        return ServingMetrics(requests=all_reqs, duration=self.now)
+        """Serve a full (deep-copied) request list to completion or the
+        horizon. Returns metrics over the requests submitted since the
+        previous ``run`` (epoch-scoped, mirroring ``DuetEngine.run`` — a
+        reused instance never double-counts earlier epochs)."""
+        self.submit(sorted(copy.deepcopy(requests),
+                           key=lambda r: r.arrival))
+        self.service_until(self.sim.horizon)
+        reqs = self._all[self._epoch:]
+        self._epoch = len(self._all)
+        duration, self._epoch_now = self.now - self._epoch_now, self.now
+        return ServingMetrics(requests=reqs, duration=duration)
 
 
 # ---------------------------------------------------------------------------
-class ClusterSim:
-    """N independent replicas with round-robin request dispatch."""
+class _SimPrefixIndex:
+    """Optimistic per-replica block-hash index for routing simulation.
 
-    def __init__(self, make_instance, n: int):
-        self.instances = [make_instance(i) for i in range(n)]
+    The sim router inserts a routed request's full-page prompt digests
+    immediately (prefill completion is assumed — the one deliberate
+    divergence from the real replica, which indexes at prefill
+    completion), so prefix affinity has the same signal shape as the real
+    ``kv_mgr.match_prefix`` without device pools. Uses the exact hashing
+    convention of the live manager (``kvcache.block_keys``)."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._keys: set = set()
+
+    def match_keys(self, keys) -> int:
+        n = 0
+        for key in keys:
+            if key not in self._keys:
+                break
+            n += 1
+        return n * self.page_size
+
+    def insert_keys(self, keys):
+        self._keys.update(keys)
+
+
+class _SimReplicaView:
+    """Routing-signal adapter over one simulated replica (the sim twin of
+    ``router._EngineView``)."""
+
+    def __init__(self, inst: "InstanceSim", index: _SimPrefixIndex):
+        self.inst = inst
+        self.index = index
+        self.page_size = index.page_size
+
+    def outstanding_tokens(self) -> int:
+        return self.inst.outstanding_tokens()
+
+    def match_keys(self, keys) -> int:
+        return self.index.match_keys(keys)
+
+
+class ClusterSim:
+    """N independent replicas behind a dispatch policy.
+
+    Shares the policy implementations of the real cluster router
+    (``repro.serving.router``) and the same discrete-event routing
+    semantics: every replica is advanced to each request's arrival before
+    the dispatch decision, so load and prefix signals are the replica
+    state at route time. A routed request's modeled prefix hit is written
+    to ``Request.cached_prompt`` (the PR-3 machinery: the policy then
+    starts its prefill at the cached length) and its prompt tokens are
+    dropped — simulated replicas consume lengths only.
+    """
+
+    def __init__(self, make_instance, n: int,
+                 policy: Union[str, DispatchPolicy] = "round-robin",
+                 page_size: int = DEFAULT_PAGE_SIZE):
+        """Args:
+            make_instance: ``replica_index -> InstanceSim`` factory.
+            n: replica count.
+            policy: dispatch policy name (``router.ROUTER_POLICIES``) or
+                instance; default round-robin (the Fig. 2 baseline and
+                the real router's parity oracle).
+            page_size: granularity of the modeled prefix index (match the
+                engine's page size for sim-vs-real comparisons).
+        """
+        self.instances: List[InstanceSim] = [make_instance(i)
+                                             for i in range(n)]
+        self.policy = policy if isinstance(policy, DispatchPolicy) \
+            else make_dispatch_policy(policy)
+        self._page_size = page_size
+        self._indices = [_SimPrefixIndex(page_size) for _ in range(n)]
+        self._views = [_SimReplicaView(inst, idx) for inst, idx
+                       in zip(self.instances, self._indices)]
+        self.decisions: List[RouterEvent] = []
 
     def run(self, requests: List[Request]) -> ServingMetrics:
-        shards: List[List[Request]] = [[] for _ in self.instances]
-        for i, r in enumerate(sorted(requests, key=lambda r: r.arrival)):
-            shards[i % len(self.instances)].append(r)
+        """Route + simulate the full trace; returns cluster-merged
+        metrics (duration = the slowest replica's clock). Dispatch
+        decisions are recorded in ``self.decisions`` for parity checks
+        against the real router."""
+        reqs = sorted(copy.deepcopy(requests), key=lambda r: r.arrival)
+        for r in reqs:
+            for inst in self.instances:
+                inst.service_until(r.arrival)
+            # one hashing pass per dispatch: the digests feed the policy's
+            # probe AND the chosen replica's hit-model/insert below
+            keys = None if r.prompt_tokens is None \
+                else block_keys(r.prompt_tokens, self._page_size)
+            idx, matched = self.policy.choose(self._views, r.prompt_tokens,
+                                              keys)
+            self.policy.record(idx)
+            if keys is not None:
+                # model the hit on the CHOSEN replica regardless of policy
+                # — a real replica's kv_mgr serves its cached pages even
+                # when a blind policy routed the request there — capped
+                # the way the real lock is: at most prompt_len-1 cached so
+                # one suffix token recomputes
+                hit = self._indices[idx].match_keys(keys)
+                if hit:
+                    r.cached_prompt = min(hit, r.prompt_len - 1)
+                self._indices[idx].insert_keys(keys)
+                r.prompt_tokens = None   # sim replicas consume lengths only
+            self.decisions.append(RouterEvent(
+                rid=r.rid, replica=idx, policy=self.policy.name,
+                matched_tokens=matched,
+                outstanding=tuple(v.outstanding_tokens()
+                                  for v in self._views),
+                t=r.arrival))
+            self.instances[idx].submit(r)
         merged = ServingMetrics()
-        for inst, shard in zip(self.instances, shards):
-            m = inst.run(shard)
+        for inst in self.instances:
+            inst.service_until(float("inf"))
+            m = inst.metrics()
             merged.requests.extend(m.requests)
             merged.duration = max(merged.duration, m.duration)
         return merged

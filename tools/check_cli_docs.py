@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Docs-drift guard: every CLI flag must appear in docs/CLI.md.
+
+Scrapes the argparse parsers of ``repro.launch.serve``,
+``repro.launch.dryrun`` and ``benchmarks.run`` and asserts each long option
+string occurs verbatim in ``docs/CLI.md``. Run from the repo root with
+``PYTHONPATH=src`` (the CI docs-guard step does); exits non-zero listing
+any undocumented flags, so a new flag cannot land without its docs.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+DOC = os.path.join(REPO, "docs", "CLI.md")
+
+
+def parser_flags(parser) -> list:
+    """All long option strings of a parser, --help excluded."""
+    flags = []
+    for action in parser._actions:           # noqa: SLF001 — argparse has no
+        for opt in action.option_strings:    # public option enumeration API
+            if opt.startswith("--") and opt != "--help":
+                flags.append(opt)
+    return flags
+
+
+def main() -> int:
+    from benchmarks.run import build_parser as bench_parser
+    from repro.launch.dryrun import build_parser as dryrun_parser
+    from repro.launch.serve import build_parser as serve_parser
+
+    if not os.path.exists(DOC):
+        print(f"docs drift: {DOC} does not exist", file=sys.stderr)
+        return 1
+    doc = open(DOC).read()
+
+    missing = []
+    for cli, parser in (("serve.py", serve_parser()),
+                        ("dryrun.py", dryrun_parser()),
+                        ("benchmarks/run.py", bench_parser())):
+        for flag in parser_flags(parser):
+            # word-boundary match so e.g. `--out` is not satisfied by a
+            # mention of `--output`
+            if not re.search(re.escape(flag) + r"(?![\w-])", doc):
+                missing.append((cli, flag))
+
+    if missing:
+        print("docs drift: flags missing from docs/CLI.md:",
+              file=sys.stderr)
+        for cli, flag in missing:
+            print(f"  {cli}: {flag}", file=sys.stderr)
+        return 1
+    n = sum(len(parser_flags(p)) for p in
+            (serve_parser(), dryrun_parser(), bench_parser()))
+    print(f"docs/CLI.md covers all {n} CLI flags")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
