@@ -17,8 +17,16 @@ much of it the prefix cache removes, two ways:
    uncached suffix, so the roofline/mux predictions shrink with the hit
    rate. Emits throughput and mean TTFT per hit fraction.
 
+3. **Tier sweep** (ISSUE 6) — a sharer/polluter interleave whose
+   polluters flush the cached prefix out of a deliberately tiny HBM pool
+   runs three ways at the *same* HBM pool size: eviction-only, fp32 host
+   tier, int8 host tier. The host tier must land a strictly higher hit
+   rate than eviction-only — the demoted prefix survives to be promoted
+   instead of being recomputed — with demotion/promotion traffic emitted
+   alongside.
+
 Usage:
-  PYTHONPATH=src python benchmarks/prefix_cache_sweep.py [--real]
+  PYTHONPATH=src python benchmarks/prefix_cache_sweep.py [--real] [--tiers]
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ import argparse
 
 import numpy as np
 
-from common import DEFAULT_ARCH, emit
+from benchmarks.common import DEFAULT_ARCH, emit
 
 from repro.configs import get_config, reduced
 from repro.serving.simulator import SimConfig, make_duet_instance
@@ -101,15 +109,86 @@ def real(arch: str, n=6, body=24, out=6):
         emit(f"{tag}_cold_mean_ttft_ms", cold["mean_ttft_s"] * 1e3)
 
 
+def tiered(arch: str, sharers=3, shared=16, polluter=48, out=4):
+    """Equal-HBM-pool comparison: eviction-only vs host tier (fp32, int8).
+
+    Returns the per-variant hit rates and asserts the acceptance pin:
+    the host tier's hit rate is strictly higher than eviction-only."""
+    import jax
+
+    from repro.models import Model
+    from repro.serving import DuetEngine, EngineConfig, Request
+
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(max_slots=1, max_len=128, token_budget=48, page_size=8,
+              paged=True, prefix_cache=True, kv_pool_tokens=64)
+
+    def workload():
+        common = np.random.default_rng(99).integers(
+            0, cfg.vocab_size, shared).astype(np.int32)
+        reqs = []
+        for i in range(2 * sharers - 1):
+            if i % 2 == 0:
+                body = np.random.default_rng(1000 + i).integers(
+                    0, cfg.vocab_size, 8).astype(np.int32)
+                toks = np.concatenate([common, body])
+            else:       # polluter: unique prompt sized to flush the pool
+                toks = np.random.default_rng(2000 + i).integers(
+                    0, cfg.vocab_size, polluter).astype(np.int32)
+            reqs.append(Request(rid=i, arrival=0.01 * i,
+                                prompt_len=len(toks), output_len=out,
+                                prompt_tokens=toks))
+        return reqs
+
+    variants = [("evict", {}),
+                ("host_fp32", dict(host_kv_tokens=512)),
+                ("host_int8", dict(host_kv_tokens=512, kv_quant="int8"))]
+    rates = {}
+    for name, extra in variants:
+        eng = DuetEngine(model, params, EngineConfig(**kw, **extra))
+        eng.submit(workload())
+        m = eng.run().summary()
+        st = eng.kv_mgr.prefix_stats()
+        assert m["num_finished"] == 2 * sharers - 1
+        tag = f"prefix_cache/tier_{name}"
+        emit(f"{tag}_hit_rate", st["hit_rate"])
+        emit(f"{tag}_hit_tokens", st["hit_tokens"])
+        emit(f"{tag}_evictions", st["evictions"])
+        emit(f"{tag}_demotions", st["demotions"])
+        emit(f"{tag}_promotions", st["promotions"])
+        emit(f"{tag}_host_hit_tokens", st["host_hit_tokens"])
+        emit(f"{tag}_mean_ttft_ms", m["mean_ttft_s"] * 1e3)
+        rates[name] = st["hit_rate"]
+    assert rates["host_fp32"] > rates["evict"], \
+        f"host tier must beat eviction-only at equal HBM pool: {rates}"
+    assert rates["host_int8"] > rates["evict"], rates
+    return rates
+
+
+def run(quick: bool = True):
+    """benchmarks/run.py entry: the simulated sweep plus the tier sweep
+    (real reduced engines — the ISSUE 6 acceptance numbers)."""
+    simulated(get_config(DEFAULT_ARCH), n=80 if quick else 150)
+    tiered(DEFAULT_ARCH)
+    if not quick:
+        real(DEFAULT_ARCH)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=DEFAULT_ARCH)
     ap.add_argument("--real", action="store_true",
                     help="also run the real reduced-config engines")
+    ap.add_argument("--tiers", action="store_true",
+                    help="also run the tiered-KV sweep (real engines)")
     args = ap.parse_args()
     simulated(get_config(args.arch))
     if args.real:
         real(args.arch)
+    if args.tiers:
+        tiered(args.arch)
 
 
 if __name__ == "__main__":

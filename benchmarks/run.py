@@ -35,8 +35,9 @@ def main(argv=None) -> None:
                             fig2_agg_vs_disagg, fig3_partition_scaling,
                             fig6_end_to_end, fig7_multichip,
                             fig8_roofline_accuracy, fig9_static_partition,
-                            fig10_breakdown, gpu_regime, roofline_table,
-                            table2_sensitivity, table3_cluster)
+                            fig10_breakdown, gpu_regime, prefix_cache_sweep,
+                            roofline_table, table2_sensitivity,
+                            table3_cluster)
     suites = [
         ("gpu_regime", gpu_regime),
         ("fig1", fig1_saturation),
@@ -50,6 +51,7 @@ def main(argv=None) -> None:
         ("ablation_k", ablation_lookahead),
         ("table2", table2_sensitivity),
         ("table3", table3_cluster),
+        ("prefix_cache", prefix_cache_sweep),
         ("roofline", roofline_table),
     ]
     failures = []

@@ -26,9 +26,16 @@ VOCAB_PAD_MULTIPLE = 256  # embedding tables padded so `model`-axis sharding div
 
 # Single source of truth for how block kinds store sequence state: attention
 # kinds keep it in the KV cache (paged pools); recurrent kinds carry O(1)
-# per-slot state that must process every token. Every allowlist downstream
-# (model assembly, page-pool shapes, prefix-cache gating) derives from these.
-ATTENTION_KINDS = ("attn", "attn_moe", "shared_attn", "mla", "mla_moe")
+# per-slot state that must process every token. Attention further splits by
+# cache layout — GQA kinds store (K, V) per KV head, MLA kinds store the
+# compressed (latent, rope) pair — and that split decides page-pool shapes,
+# sharding axes and roofline KV-byte counts. Every allowlist downstream
+# (model assembly, page-pool shapes, prefix-cache gating, KV sharding)
+# derives from these tuples; a new kind registered here is either fully
+# supported everywhere or rejected loudly, never half-registered.
+GQA_KINDS = ("attn", "attn_moe", "shared_attn")
+MLA_KINDS = ("mla", "mla_moe")
+ATTENTION_KINDS = GQA_KINDS + MLA_KINDS
 RECURRENT_KINDS = ("mamba2", "slstm", "mlstm")
 
 

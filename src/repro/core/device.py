@@ -25,11 +25,10 @@ from typing import List, Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import RECURRENT_KINDS, ArchConfig
+from repro.configs.base import (GQA_KINDS as _GQA_KINDS,
+                                MLA_KINDS as _MLA_KINDS,
+                                RECURRENT_KINDS, ArchConfig)
 from repro.models.params import axis_rules, param_shardings, shard_params
-
-_GQA_KINDS = ("attn", "attn_moe", "shared_attn")
-_MLA_KINDS = ("mla", "mla_moe")
 
 
 class DeviceContext:

@@ -27,7 +27,7 @@ from typing import Callable, Iterable, List, Literal, Optional
 
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import GQA_KINDS, MLA_KINDS, ArchConfig
 
 Phase = Literal["prefill", "decode"]
 
@@ -155,11 +155,11 @@ class RooflineModel:
         cfg, b = self.cfg, self.b
         D = cfg.d_model
         cost = OpCost()
-        if kind in ("attn", "attn_moe", "shared_attn"):
+        if kind in GQA_KINDS:
             H, G, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
             cost += _linear(n, D, (H + 2 * G) * dh, b)   # qkv
             cost += _linear(n, H * dh, D, b)             # out
-        elif kind in ("mla", "mla_moe"):
+        elif kind in MLA_KINDS:
             H = cfg.num_heads
             r, nope, rope, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
                                  cfg.qk_rope_dim, cfg.v_head_dim)
@@ -218,7 +218,7 @@ class RooflineModel:
         cfg, b = self.cfg, self.b
         q = q.astype(np.float64)
         c = c.astype(np.float64)
-        if kind in ("attn", "attn_moe", "shared_attn"):
+        if kind in GQA_KINDS:
             H, G, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
             ctx = q + c
             if self.sliding_window is not None:
@@ -226,7 +226,7 @@ class RooflineModel:
             F = 4.0 * H * q * ctx * dh + 2.0 * H * q * ctx
             B = 2.0 * H * q * dh * b + 2.0 * G * self._page_pad(ctx) * dh * b
             return F, B
-        if kind in ("mla", "mla_moe"):
+        if kind in MLA_KINDS:
             H = cfg.num_heads
             r, nope, rope, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
                                  cfg.qk_rope_dim, cfg.v_head_dim)

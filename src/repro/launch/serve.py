@@ -46,7 +46,7 @@ from repro.models.transformer import Model
 from repro.serving.async_engine import (AsyncDuetEngine, FinishEvent,
                                         TokenEvent)
 from repro.serving.engine import DuetEngine, EngineConfig
-from repro.serving.kvcache import DEFAULT_PAGE_SIZE
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE, KV_QUANT_MODES
 from repro.serving.request import synth_prompt_tokens
 from repro.serving.router import ROUTER_POLICIES, Router, RouterEvent
 from repro.serving.traces import TRACES, synth_trace
@@ -119,6 +119,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="prepend a common system prompt of this many "
                          "tokens to every trace request (exercises the "
                          "prefix cache)")
+    ap.add_argument("--shared-prefix-every", type=int, default=1,
+                    metavar="N",
+                    help="apply the shared prefix to every Nth request "
+                         "only (default 1 = all). With N>1 the unshared "
+                         "requests pressure the pool between prefix "
+                         "reuses, forcing demote->promote round trips — "
+                         "the tier-smoke workload")
+    # tiered KV cache (DESIGN.md §9): host-DRAM demotion tier
+    ap.add_argument("--host-kv-tokens", type=int, default=0,
+                    help="host-DRAM demotion tier capacity in tokens: "
+                         "cold cached pages demote there instead of being "
+                         "evicted and promote back on a prefix hit "
+                         "(0 = eviction-only baseline; requires the "
+                         "prefix cache)")
+    ap.add_argument("--kv-quant", choices=list(KV_QUANT_MODES),
+                    default="none",
+                    help="storage format of host-tier pages: none = fp32 "
+                         "(byte-exact round trips), int8 = symmetric "
+                         "per-tensor quantization with stored scales")
     # length handling (previously a silent clamp)
     ap.add_argument("--clamp", dest="clamp", action="store_true",
                     default=True,
@@ -134,16 +153,24 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _apply_shared_prefix(reqs, prefix_len: int, vocab_size: int, seed: int):
-    """Prepend one common system prompt to every request (the per-request
-    body comes from the same rid-seeded derivation the engine uses, so
-    --shared-prefix-len 0 and the default path produce identical bodies).
-    Runs *before* length clamping: the prefix counts against the caps."""
+def _apply_shared_prefix(reqs, prefix_len: int, vocab_size: int, seed: int,
+                         every: int = 1):
+    """Prepend one common system prompt to every `every`-th request (the
+    per-request body comes from the same rid-seeded derivation the engine
+    uses, so --shared-prefix-len 0 and the default path produce identical
+    bodies).  Runs *before* length clamping: the prefix counts against
+    the caps.  With every > 1 the unshared requests act as pool
+    polluters between prefix reuses, which is what drives the cached
+    prefix through a host-tier demote->promote round trip."""
     if prefix_len <= 0:
         return reqs
+    if every < 1:
+        raise SystemExit("--shared-prefix-every must be >= 1")
     common = np.random.default_rng(10_000 + seed).integers(
         0, vocab_size, prefix_len).astype(np.int32)
     for r in reqs:
+        if r.rid % every:
+            continue
         body = synth_prompt_tokens(r.rid, vocab_size, r.prompt_len)
         r.prompt_tokens = np.concatenate([common, body])
         r.prompt_len += prefix_len
@@ -191,7 +218,8 @@ def main(argv=None):
     reqs = synth_trace(args.trace, args.num_requests, args.qps,
                        seed=args.seed)
     reqs = _apply_shared_prefix(reqs, args.shared_prefix_len,
-                                cfg.vocab_size, args.seed)
+                                cfg.vocab_size, args.seed,
+                                every=args.shared_prefix_every)
     reqs = _clamp_lengths(reqs, args.max_len, args.clamp)
 
     if args.prefix_cache and not args.paged:
@@ -199,6 +227,9 @@ def main(argv=None):
         _warn("--prefix-cache requires paged KV; running without it")
     prefix_cache = args.paged if args.prefix_cache is None \
         else args.prefix_cache
+    if args.host_kv_tokens > 0 and not (args.paged and prefix_cache):
+        _warn("--host-kv-tokens requires paged KV with the prefix cache; "
+              "running without the host tier")
 
     ec = EngineConfig(
         max_slots=args.max_slots, max_len=args.max_len,
@@ -206,6 +237,8 @@ def main(argv=None):
         paged=args.paged, page_size=args.page_size,
         kv_pool_tokens=args.kv_pool_tokens,
         prefix_cache=prefix_cache,
+        host_kv_tokens=args.host_kv_tokens,
+        kv_quant=args.kv_quant,
         temperature=args.temperature,
         tp=args.tp, units=max(1, args.tp))
 

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import GQA_KINDS, MLA_KINDS, ArchConfig
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
@@ -38,8 +38,11 @@ from repro.models.params import (_mlstm_inner, _slstm_ffn_dim, abstract_params,
 from repro.models.ssm import MambaCache
 from repro.models.xlstm import MLSTMCache, SLSTMCache
 
-ATTN_KINDS = ("attn", "attn_moe", "shared_attn")
-MLA_KINDS = ("mla", "mla_moe")
+# Block-kind allowlists come from configs.base — the single source of
+# truth shared with page pools, KV sharding and the roofline (re-exported
+# under the historical local names).
+ATTN_KINDS = GQA_KINDS
+
 
 
 class Model:

@@ -52,7 +52,6 @@ from repro.core.lookahead import make_superiter_fn
 from repro.core.roofline import HardwareSpec, TPU_V5E
 from repro.models.transformer import Model
 from repro.serving.engine import DuetEngine, EngineConfig
-from repro.serving.kvcache import copy_pool_pages
 from repro.serving.request import Phase, Request, ServingMetrics
 from repro.serving.scheduler import IterationPlan
 
@@ -118,6 +117,11 @@ class _Inflight:
     toks_idx: int = -1
     dec_items: List[_DecItem] = field(default_factory=list)
     first_items: List[_FirstItem] = field(default_factory=list)
+    # tier demotions riding this iteration's batched device_get: (digest,
+    # per-layer (k_idx, v_idx) positions into `fetch`, None for recurrent
+    # layers). The slices were enqueued before any pool-rewriting op, so
+    # they read the pre-overwrite page content.
+    demotions: List[tuple] = field(default_factory=list)
 
 
 class AsyncDuetEngine(DuetEngine):
@@ -153,6 +157,10 @@ class AsyncDuetEngine(DuetEngine):
         self._inbox: deque = deque()
         self._lock = threading.Lock()
         self._inflight: Optional[_Inflight] = None
+        # demotion slices captured during the current super-iteration's
+        # planning/dispatch, waiting to be attached to its _Inflight so
+        # they ride the one batched device_get (no extra host syncs)
+        self._tier_captures: List[tuple] = []
 
     # ------------------------------------------------------------- streaming
     def submit(self, requests: Union[Request, Sequence[Request]],
@@ -283,6 +291,29 @@ class AsyncDuetEngine(DuetEngine):
             r.remaining_prompt + max(0, r.output_len - r.generated)
             for r in inbox)
 
+    # ---------------------------------------------------------------- tiers
+    def _capture_demotion(self, key: bytes, slices: List):
+        """Defer the host read: hold the page's device slices (enqueued
+        eagerly, before any op that rewrites the page, so they see the
+        pre-overwrite content) until :meth:`_attach_tier_captures` folds
+        them into the iteration's single batched ``device_get``."""
+        self._tier_captures.append((key, slices))
+
+    def _attach_tier_captures(self, inf: _Inflight):
+        """Append pending demotion slices to ``inf.fetch``; their values
+        arrive with the iteration's one blocking sync and complete the
+        migrations in :meth:`_drain_record`."""
+        for key, slices in self._tier_captures:
+            layout = []
+            for s in slices:
+                if s is None:
+                    layout.append(None)
+                else:
+                    layout.append((len(inf.fetch), len(inf.fetch) + 1))
+                    inf.fetch.extend(s)
+            inf.demotions.append((key, layout))
+        self._tier_captures = []
+
     # -------------------------------------------------------- super-iteration
     def _step(self, plan: IterationPlan) -> Iterator[Event]:
         """Plan + dispatch one super-iteration, then drain the previous one.
@@ -333,9 +364,9 @@ class AsyncDuetEngine(DuetEngine):
                 continue   # deferred: decode completions free pages
             if self.paged:
                 # privatise a shared first page (CoW) before the chunk's
-                # program writes into it — device copy, no host sync
-                self.pools = copy_pool_pages(
-                    self.pools,
+                # program writes into it — device copy, no host sync (any
+                # pending demotion capture is enqueued first, same rule)
+                self._cow_copy(
                     self.kv_mgr.ensure_writable(r.rid, r.prefilled))
             self.kv_mgr.allocate(r.rid, chunk)
             start = r.prefilled
@@ -382,6 +413,9 @@ class AsyncDuetEngine(DuetEngine):
                            pre_items[0] if pre_items else None, t_p)
             for item in pre_items[1:]:
                 self._dispatch(inf, 0, None, item, t_p)
+        # demotion slices captured while planning/dispatching this
+        # iteration ride its batched device_get — zero extra host syncs
+        self._attach_tier_captures(inf)
         prev, self._inflight = self._inflight, (inf if inf.fetch else None)
         if prev is not None:
             yield from self._drain_record(prev)
@@ -406,6 +440,10 @@ class AsyncDuetEngine(DuetEngine):
                   t_p: float):
         """Launch one fused program; capture its output handles in `inf`.
         Everything here is host->device only — no blocking reads."""
+        # flush tier migrations first: promoted pages must hold their
+        # content before this program can read them, and pending demotion
+        # slices must be enqueued before the program rewrites their pages
+        self._service_tiers()
         B = self.ec.max_slots
         if dec_args is None:
             dec_args = (np.zeros(B, bool), np.zeros((B, 1), np.int32), 1)
@@ -489,6 +527,11 @@ class AsyncDuetEngine(DuetEngine):
                              fi.ts)
             fi.req.output_tokens.append(tok)
             yield from self._maybe_finish(fi.req)
+        for key, layout in inf.demotions:
+            self.kv_mgr.complete_demotion(key, [
+                None if pair is None else (np.asarray(vals[pair[0]]),
+                                           np.asarray(vals[pair[1]]))
+                for pair in layout])
 
     def _maybe_finish(self, r: Request) -> Iterator[Event]:
         if r.phase == Phase.FINISHED and \

@@ -49,9 +49,9 @@ from repro.core.lookahead import make_lookahead_fn, make_paged_lookahead_fn
 from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import HardwareSpec, TPU_V5E
 from repro.models.transformer import Model
-from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, PagedKVCacheManager,
-                                   PagePoolConfig, copy_pool_pages,
-                                   init_page_pools)
+from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, HostPoolConfig,
+                                   PagedKVCacheManager, PagePoolConfig,
+                                   copy_pool_pages, init_page_pools)
 from repro.serving.request import (Phase, Request, ServingMetrics,
                                    synth_prompt_tokens)
 from repro.serving.scheduler import DuetPolicy, IterationPlan, QueueState
@@ -87,6 +87,14 @@ class EngineConfig:
     # mode). Requests sharing a prompt prefix map the cached pages
     # read-only and prefill only the uncached suffix.
     prefix_cache: bool = True
+    # host-DRAM demotion tier (DESIGN.md §9): cold cached pages demote to a
+    # numpy page store of ``host_kv_tokens`` capacity instead of being
+    # evicted, and promote back on a prefix hit. ``kv_quant`` picks the
+    # host storage format: "none" = fp32 (byte-exact round trips), "int8" =
+    # symmetric per-tensor quantization with stored scales. 0 disables the
+    # tier (eviction-only baseline). Requires paged + prefix_cache.
+    host_kv_tokens: int = 0
+    kv_quant: str = "none"
 
 
 class DuetEngine:
@@ -141,9 +149,14 @@ class DuetEngine:
             pool_tokens = engine_cfg.kv_pool_tokens \
                 or engine_cfg.max_slots * engine_cfg.max_len
             num_pages = -(-pool_tokens // ps) + 1   # +1: reserved null page
+            host_pool = None
+            if engine_cfg.host_kv_tokens > 0 and self.prefix_cache:
+                host_pool = HostPoolConfig(
+                    num_pages=-(-engine_cfg.host_kv_tokens // ps),
+                    quant=engine_cfg.kv_quant)
             self.kv_mgr = PagedKVCacheManager(
                 PagePoolConfig(num_pages=num_pages, page_size=ps),
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache, host_pool=host_pool)
             # block-table width: one request may span the whole pool
             self.max_pages = num_pages - 1
             self.pools = init_page_pools(self.cfg, self.kv_mgr.pool,
@@ -360,6 +373,55 @@ class DuetEngine:
                 return True
         return False
 
+    # ----------------------------------------------------- tier migrations
+    def _service_tiers(self):
+        """Move queued page migrations (DESIGN.md §9): capture demoted
+        pages' pool content for the host store, then scatter promoted host
+        blocks into their fresh pages. Demotions are captured *first* — a
+        promotion may target the very page id whose old content is still
+        queued for capture. Must run before any device op that may rewrite
+        pool pages (the demoted ids are already back on the free list);
+        both engines call it from every dispatch and CoW site."""
+        if not self.paged or self.pools is None:
+            return
+        for page, key in self.kv_mgr.drain_demotions():
+            self._capture_demotion(key, [
+                None if p is None else (p[0][page], p[1][page])
+                for p in self.pools])
+        promos = self.kv_mgr.drain_promotions()
+        if promos:
+            idx = jnp.asarray([page for page, _, _ in promos])
+            pools = []
+            for li, p in enumerate(self.pools):
+                if p is None:
+                    pools.append(None)
+                    continue
+                k, v = p
+                kv_new = [jnp.asarray(
+                    np.stack([pl[li][j] for _, _, pl in promos]),
+                    dtype=k.dtype) for j in (0, 1)]
+                pools.append((k.at[idx].set(kv_new[0]),
+                              v.at[idx].set(kv_new[1])))
+            self.pools = pools
+
+    def _capture_demotion(self, key: bytes, slices: List):
+        """Read one demoted page's per-layer device slices to host and
+        complete the migration. Synchronous engine: immediate blocking
+        reads. The async engine overrides this to batch the reads into its
+        single per-super-iteration ``device_get``."""
+        self.kv_mgr.complete_demotion(key, [
+            None if s is None else (np.asarray(s[0]), np.asarray(s[1]))
+            for s in slices])
+
+    def _cow_copy(self, copies):
+        """Apply CoW page copies, servicing the migration queues first —
+        the CoW destination may be the very page a pending demotion still
+        needs to capture, so the capture must be enqueued before the copy
+        overwrites it."""
+        if copies:
+            self._service_tiers()
+            self.pools = copy_pool_pages(self.pools, copies)
+
     # ------------------------------------------------------------ execution
     def _exec_prefill_chunk(self, r: Request, chunk: int) -> str:
         """Run one prefill chunk. Returns "continue" (more prompt left),
@@ -371,13 +433,16 @@ class DuetEngine:
         if self.paged:
             # the chunk's first write may land in a shared/cached page
             # (fully page-aligned prefix hit): privatise it first
-            self.pools = copy_pool_pages(
-                self.pools, self.kv_mgr.ensure_writable(r.rid, r.prefilled))
+            self._cow_copy(self.kv_mgr.ensure_writable(r.rid, r.prefilled))
         self.kv_mgr.allocate(r.rid, chunk)
         toks = jnp.asarray(
             r.prefill_token_ids()[r.prefilled:r.prefilled + chunk])[None, :]
         sub = self._slice_cache(r.slot)
         if self.paged:
+            # flush tier migrations before the program touches the pools:
+            # promoted prefix pages must hold their content and demoted
+            # pages must be captured before the chunk may rewrite them
+            self._service_tiers()
             tbl = jnp.asarray(
                 self.kv_mgr.padded_tables([r.rid],
                                           self._table_width([r.rid])))
@@ -463,8 +528,7 @@ class DuetEngine:
         if not self.paged:
             return
         for r in reqs:
-            self.pools = copy_pool_pages(
-                self.pools,
+            self._cow_copy(
                 self.kv_mgr.ensure_writable(r.rid,
                                             self.kv_mgr.length(r.rid)))
 
@@ -495,6 +559,7 @@ class DuetEngine:
         if not reqs:
             return 0, []
         self._privatize_decode_pages(reqs)
+        self._service_tiers()
         active, tbl, _ = self._decode_args(reqs, kb)
         first = jnp.asarray(self.slot_last_token)[:, None]
         pos = jnp.asarray(self.slot_pos)

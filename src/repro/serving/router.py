@@ -358,9 +358,14 @@ class Router:
         agg = {k: sum(p[k] for p in per)
                for k in ("lookups", "lookup_tokens", "hit_requests",
                          "hit_tokens", "cow_copies", "evictions",
-                         "pages_allocated", "cached_pages", "shared_pages")}
+                         "pages_allocated", "demotions", "promotions",
+                         "host_hit_requests", "host_hit_tokens",
+                         "host_evictions", "cached_pages", "shared_pages")}
+        agg["tiers"] = {t: sum(p["tiers"][t] for p in per)
+                        for t in per[0]["tiers"]} if per else {}
         agg["hit_rate"] = agg["hit_tokens"] / max(1, agg["lookup_tokens"])
         agg["enabled"] = any(p["enabled"] for p in per)
+        agg["host_tier"] = any(p["host_tier"] for p in per)
         agg["per_replica"] = per
         return agg
 

@@ -25,7 +25,7 @@ import copy
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Union
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import GQA_KINDS, MLA_KINDS, ArchConfig
 from repro.core.multiplexer import AdaptiveMultiplexer
 from repro.core.roofline import (HardwareSpec, RequestLoad, RooflineModel,
                                  TPU_V5E)
@@ -42,9 +42,9 @@ from repro.serving.scheduler import (BasePolicy, ChunkedPrefillPolicy,
 def kv_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> int:
     total = 0
     for kind in cfg.block_pattern:
-        if kind in ("attn", "attn_moe", "shared_attn"):
+        if kind in GQA_KINDS:
             total += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
-        elif kind in ("mla", "mla_moe"):
+        elif kind in MLA_KINDS:
             total += (cfg.kv_lora_rank + cfg.qk_rope_dim) * dtype_bytes
         # recurrent blocks: O(1) state, no per-token cost
     return total
@@ -264,7 +264,16 @@ class _SimPrefixIndex:
     divergence from the real replica, which indexes at prefill
     completion), so prefix affinity has the same signal shape as the real
     ``kv_mgr.match_prefix`` without device pools. Uses the exact hashing
-    convention of the live manager (``kvcache.block_keys``)."""
+    convention of the live manager (``kvcache.block_keys``).
+
+    Tier-blind by design: a digest inserted here is matchable forever,
+    which models the real manager's *unified* view across tiers — the real
+    ``match_prefix_keys`` reports HBM- and host-resident blocks
+    identically, so demotion never changes a routing decision, only the
+    promotion copies behind it. (With a host tier the never-evicts
+    optimism tightens: real blocks now survive pool pressure by demoting,
+    so sim-vs-real dispatch parity holds under pressure traces that would
+    previously diverge — pinned in tests/test_tiered_kv.py.)"""
 
     def __init__(self, page_size: int):
         self.page_size = page_size

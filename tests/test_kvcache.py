@@ -56,6 +56,16 @@ def test_page_tables_padded():
     assert (tbl[1] == 0).all()
 
 
+def test_padded_tables_rejects_overflowing_table():
+    """Regression (ISSUE 6): a request spanning more pages than max_pages
+    used to be silently truncated ([:max_pages]) — the device program then
+    attends over the wrong pages. It must raise instead."""
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=9, page_size=4))
+    mgr.allocate(7, 25)                     # 7 pages
+    with pytest.raises(ValueError, match="spans 7 pages > max_pages=5"):
+        mgr.padded_tables([7], max_pages=5)
+
+
 def test_write_then_gather_roundtrip():
     P, ps, G, dh = 8, 4, 2, 8
     pages = jnp.zeros((P, ps, G, dh))

@@ -1,0 +1,398 @@
+"""Tiered KV cache (ISSUE 6 tentpole): explicit page lifecycle with a
+host-DRAM demotion tier and async promotion.
+
+Manager level: the tier state machine rejects illegal edges, pressure
+demotes (never drops) LRU-cold cached blocks into the host store, ready
+host blocks match and promote back into fresh HBM pages (byte-exact fp32
+round trips, pinned int8 error budget), pending captures are neither
+matchable nor evictable, and a promotion racing admission at a full pool
+truncates the hit instead of failing.  Engine level: warm-vs-cold token
+equivalence through a forced demote->promote round trip on both engines,
+the async engine's one-device_get-per-super-iteration contract with tier
+traffic, refcount/LRU drain across tiers after retire/preempt/reject,
+and the sim-vs-real dispatch-parity pin promised by
+``simulator._SimPrefixIndex``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import (AsyncDuetEngine, DuetEngine, EngineConfig,
+                           Request)
+from repro.serving.kvcache import (HostPageStore, HostPoolConfig,
+                                   PagedKVCacheManager, PagePoolConfig,
+                                   PageTier, block_keys)
+
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("qwen3-4b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mgr(num_pages, host_pages=0, quant="none"):
+    host = HostPoolConfig(num_pages=host_pages, quant=quant) \
+        if host_pages else None
+    return PagedKVCacheManager(
+        PagePoolConfig(num_pages=num_pages, page_size=PS),
+        prefix_cache=True, host_pool=host)
+
+
+def _ids(seed, n):
+    return np.random.default_rng(seed).integers(0, 997, n).astype(np.int32)
+
+
+def _payload(seed, layers=2):
+    """Synthetic per-layer (k_page, v_page) capture for complete_demotion."""
+    rng = np.random.default_rng(seed)
+    return [(rng.standard_normal((PS, 4)).astype(np.float32),
+             rng.standard_normal((PS, 4)).astype(np.float32))
+            for _ in range(layers)]
+
+
+def _demote_all(mgr, payload_seed=0):
+    """Pressure every LRU-cold cached block out of HBM and complete the
+    captures with deterministic payloads. Returns {digest: payload}."""
+    n = len(mgr._lru)
+    squatter = 999
+    mgr.allocate(squatter, (len(mgr._free) + n) * PS)
+    done = {}
+    for i, (page, key) in enumerate(mgr.drain_demotions()):
+        pl = _payload(payload_seed + i)
+        mgr.complete_demotion(key, pl)
+        done[key] = pl
+    mgr.free(squatter)
+    return done
+
+
+# --------------------------------------------------------------- manager
+def test_tier_state_machine_counts_and_illegal_edges():
+    mgr = _mgr(num_pages=6, host_pages=8)
+    n = mgr.pool.num_pages - 1
+    assert mgr.tier_counts() == {PageTier.FREE: n, PageTier.HBM_ACTIVE: 0,
+                                 PageTier.HBM_CACHED: 0,
+                                 PageTier.HOST_CACHED: 0}
+    ids = _ids(1, 2 * PS)
+    mgr.allocate(1, 2 * PS)
+    assert mgr.tier_counts()[PageTier.HBM_ACTIVE] == 2
+    mgr.insert_prefix(1, ids)
+    mgr.free(1)
+    assert mgr.tier_counts()[PageTier.HBM_CACHED] == 2
+    assert mgr.tier_counts()[PageTier.FREE] == n - 2
+    # a free page can never jump straight to the cached tier
+    free_page = mgr._free[-1]
+    with pytest.raises(AssertionError, match="illegal page-tier"):
+        mgr._set_tier(free_page, PageTier.HBM_CACHED)
+
+
+def test_pressure_demotes_instead_of_evicting():
+    ids = _ids(2, 2 * PS)
+    # eviction-only baseline: the cold blocks are simply dropped
+    evict = _mgr(num_pages=5)
+    evict.allocate(1, 2 * PS)
+    evict.insert_prefix(1, ids)
+    evict.free(1)
+    evict.allocate(2, 4 * PS)
+    assert evict.stats.evictions == 2 and evict.stats.demotions == 0
+    assert evict.match_prefix(ids)[0] == 0
+    # host tier: same pressure demotes, and the blocks stay matchable
+    mgr = _mgr(num_pages=5, host_pages=8)
+    mgr.allocate(1, 2 * PS)
+    mgr.insert_prefix(1, ids)
+    mgr.free(1)
+    mgr.allocate(2, 4 * PS)
+    assert mgr.stats.demotions == 2 and mgr.stats.evictions == 0
+    demoted = mgr.drain_demotions()
+    assert len(demoted) == 2
+    # pending captures are not matchable yet
+    assert mgr.match_prefix(ids)[0] == 0
+    for i, (page, key) in enumerate(demoted):
+        mgr.complete_demotion(key, _payload(i))
+    matched, pages = mgr.match_prefix(ids)
+    assert matched == 2 * PS and pages == [-1, -1]
+    assert mgr.tier_counts()[PageTier.HOST_CACHED] == 2
+
+
+def test_promotion_round_trip_fp32_byte_identical():
+    mgr = _mgr(num_pages=8, host_pages=8)
+    ids = _ids(3, 3 * PS)
+    keys = block_keys(ids, PS)
+    mgr.allocate(1, 3 * PS)
+    mgr.insert_prefix(1, ids)
+    mgr.free(1)
+    payloads = _demote_all(mgr, payload_seed=30)
+    assert set(payloads) == set(keys)
+    # lock promotes the whole chain back into fresh HBM pages
+    matched = mgr.lock_prefix(2, ids)
+    assert matched == 3 * PS - 1            # capped at len - 1
+    promos = mgr.drain_promotions()
+    assert [k for _, k, _ in promos] == keys       # chain order
+    for page, key, payload in promos:
+        assert mgr._tier[page] == PageTier.HBM_ACTIVE
+        for (gk, gv), (wk, wv) in zip(payload, payloads[key]):
+            assert np.array_equal(gk, wk) and np.array_equal(gv, wv)
+    # the blocks moved tiers: host store no longer holds them
+    assert mgr.tier_counts()[PageTier.HOST_CACHED] == 0
+    assert mgr.stats.promotions == 3
+    assert mgr.stats.host_hit_requests == 1
+    assert mgr.stats.host_hit_tokens == matched
+    # and they are HBM-matchable again for the next request
+    assert mgr.match_prefix(ids)[0] == 3 * PS
+    mgr.free(2)
+    assert mgr.used_pages == 0
+
+
+def test_int8_round_trip_error_within_budget():
+    """DESIGN.md §9 pin: symmetric per-tensor int8 bounds the absolute
+    error by scale/2 = absmax/254 per element; all-zero pages are exact."""
+    store = HostPageStore(HostPoolConfig(num_pages=4, quant="int8"))
+    pl = _payload(40) + [None]              # recurrent layers pass through
+    store.reserve(b"k")
+    store.put(b"k", pl)
+    out = store.take(b"k")
+    assert out[-1] is None
+    for (gk, gv), (wk, wv) in zip(out[:-1], pl[:-1]):
+        for got, want in ((gk, wk), (gv, wv)):
+            budget = np.abs(want).max() / 254.0 + 1e-6
+            assert np.abs(got - want).max() <= budget
+    zero = [(np.zeros((PS, 4), np.float32), np.zeros((PS, 4), np.float32))]
+    store.reserve(b"z")
+    store.put(b"z", zero)
+    (zk, zv), = store.take(b"z")
+    assert not zk.any() and not zv.any()
+
+
+def test_host_store_full_of_pending_falls_back_to_eviction():
+    mgr = _mgr(num_pages=6, host_pages=1)
+    ids = _ids(5, 3 * PS)
+    mgr.allocate(1, 3 * PS)
+    mgr.insert_prefix(1, ids)
+    mgr.free(1)
+    mgr.allocate(2, 5 * PS)                 # reclaims all 3 cached pages
+    # one block got the only host slot; with the store full of a pending
+    # capture the others fall back to plain eviction
+    assert mgr.stats.demotions == 1
+    assert mgr.stats.evictions == 2
+    assert len(mgr.drain_demotions()) == 1
+
+
+def test_promotion_racing_admission_truncates_at_full_pool():
+    """A lock whose promotions race admission at a nearly-full pool takes
+    a shorter hit instead of raising: the chain is truncated at the first
+    unpromotable block and pass-1 references past that point are undone."""
+    mgr = _mgr(num_pages=5, host_pages=8)
+    ids = _ids(6, 3 * PS)
+    mgr.allocate(1, 3 * PS)
+    mgr.insert_prefix(1, ids)
+    mgr.free(1)
+    _demote_all(mgr, payload_seed=60)
+    # leave exactly ONE free page: the chain needs three promotions
+    mgr.allocate(7, 3 * PS)
+    assert mgr.free_pages == 1
+    matched = mgr.lock_prefix(8, ids)
+    assert matched == PS                    # truncated, not failed
+    promos = mgr.drain_promotions()
+    assert len(promos) == 1
+    assert mgr.stats.promotions == 1
+    assert mgr.stats.host_hit_tokens == PS
+    # the untaken blocks survive in the host tier for a later retry
+    assert mgr.tier_counts()[PageTier.HOST_CACHED] == 2
+    mgr.free(7)
+    mgr.free(8)
+    assert mgr.used_pages == 0              # refs drained despite the race
+    assert mgr.free_pages == mgr.pool.num_pages - 1
+
+
+def test_refcounts_and_tiers_drain_across_migration_cycles():
+    mgr = _mgr(num_pages=8, host_pages=4)
+    ids = _ids(7, 3 * PS)
+    for cycle in range(3):
+        rid = 10 + cycle
+        matched = mgr.lock_prefix(rid, ids)
+        if matched:
+            mgr.drain_promotions()
+        mgr.allocate(rid, 3 * PS - mgr.length(rid))
+        mgr.insert_prefix(rid, ids)
+        mgr.free(rid)
+        _demote_all(mgr, payload_seed=70 + cycle)
+        counts = mgr.tier_counts()
+        assert mgr.used_pages == 0
+        assert counts[PageTier.HBM_ACTIVE] == 0
+        assert (counts[PageTier.FREE] + counts[PageTier.HBM_CACHED]
+                == mgr.pool.num_pages - 1)
+        assert counts[PageTier.HOST_CACHED] == 3
+    # the same three blocks round-tripped every cycle, never duplicated
+    assert mgr.host.ready_count() == 3
+
+
+# ---------------------------------------------------------------- engines
+def _tier_trace(cfg, shared=16, sharers=3, polluter_len=48, out=4):
+    """Sharer/polluter interleave: each polluter's footprint spans nearly
+    the whole usable pool, so its allocations flush the cached prefix out
+    of HBM between reuses — every sharer after the first re-locks it
+    through a demote->promote round trip."""
+    common = np.random.default_rng(99).integers(
+        0, cfg.vocab_size, shared).astype(np.int32)
+    reqs = []
+    for i in range(2 * sharers - 1):
+        if i % 2 == 0:                      # sharer
+            body = np.random.default_rng(1000 + i).integers(
+                0, cfg.vocab_size, PS).astype(np.int32)
+            toks = np.concatenate([common, body])
+        else:                               # polluter: unique long prompt
+            toks = np.random.default_rng(2000 + i).integers(
+                0, cfg.vocab_size, polluter_len).astype(np.int32)
+        reqs.append(Request(rid=i, arrival=0.01 * i, prompt_len=len(toks),
+                            output_len=out, prompt_tokens=toks))
+    return reqs
+
+
+def _serve(model, params, reqs, engine_cls=DuetEngine, **cfg_kw):
+    cfg_kw.setdefault("max_slots", 1)
+    cfg_kw.setdefault("max_len", 128)
+    cfg_kw.setdefault("token_budget", 48)
+    cfg_kw.setdefault("page_size", PS)
+    cfg_kw.setdefault("paged", True)
+    eng = engine_cls(model, params, EngineConfig(**cfg_kw))
+    eng.submit(reqs)
+    metrics = eng.run()
+    return eng, metrics, {r.rid: list(r.output_tokens) for r in reqs}
+
+
+TIER_KW = dict(prefix_cache=True, kv_pool_tokens=64, host_kv_tokens=512)
+
+
+@pytest.mark.parametrize("engine_cls", [DuetEngine, AsyncDuetEngine])
+def test_warm_equals_cold_through_demote_promote(small_model, engine_cls):
+    """Acceptance pin: tokens served from pages that round-tripped through
+    the fp32 host tier are byte-identical to the cold-cache run."""
+    cfg, model, params = small_model
+    _, cold_m, cold = _serve(model, params, _tier_trace(cfg),
+                             engine_cls=engine_cls, prefix_cache=False)
+    assert cold_m.summary()["num_finished"] == 5
+    eng, m, warm = _serve(model, params, _tier_trace(cfg),
+                          engine_cls=engine_cls, **TIER_KW)
+    assert m.summary()["num_finished"] == 5
+    assert warm == cold
+    st = eng.kv_mgr.prefix_stats()
+    assert st["demotions"] > 0
+    assert st["promotions"] > 0
+    assert st["host_hit_requests"] > 0 and st["host_hit_tokens"] > 0
+    assert eng.kv_mgr.used_pages == 0       # refs drained across tiers
+    if engine_cls is AsyncDuetEngine:
+        # tier traffic must ride the existing batched fetch: still at most
+        # one blocking device_get per super-iteration
+        assert eng.dstats.host_syncs <= eng.dstats.super_iterations
+
+
+def test_int8_tier_serves_all_requests(small_model):
+    """int8-quantized host pages round-trip through promotion and serve
+    real decodes; the reduced model finishes the full trace. (Token
+    streams may legitimately differ from fp32 within the §9 error budget,
+    so only liveness and tier traffic are pinned here.)"""
+    cfg, model, params = small_model
+    eng, m, _ = _serve(model, params, _tier_trace(cfg),
+                       prefix_cache=True, kv_pool_tokens=64,
+                       host_kv_tokens=512, kv_quant="int8")
+    assert m.summary()["num_finished"] == 5
+    st = eng.kv_mgr.prefix_stats()
+    assert st["promotions"] > 0 and st["host_hit_requests"] > 0
+    assert eng.kv_mgr.used_pages == 0
+
+
+def test_tiers_drain_after_preemption_and_rejection(small_model):
+    """Retire/preempt/reject must release references whatever tier their
+    pages came from, and outputs must match the unconstrained run."""
+    cfg, model, params = small_model
+    mk = lambda: [Request(rid=i, arrival=0.0, prompt_len=20, output_len=12)
+                  for i in range(2)]
+    _, ref_m, ref = _serve(model, params, mk(), max_slots=2, max_len=64,
+                           token_budget=32, page_size=4,
+                           kv_pool_tokens=1024, prefix_cache=True)
+    eng, m, got = _serve(model, params, mk(), max_slots=2, max_len=64,
+                         token_budget=32, page_size=4, kv_pool_tokens=56,
+                         host_kv_tokens=512, prefix_cache=True)
+    s = m.summary()
+    assert s["num_finished"] == 2 and got == ref
+    assert s["num_preemptions"] >= 1
+    assert eng.kv_mgr.used_pages == 0
+    counts = eng.kv_mgr.tier_counts()
+    assert counts[PageTier.HBM_ACTIVE] == 0
+    # a rejected request's tier references drain too
+    reqs = _tier_trace(cfg, sharers=2)
+    reqs[-1].output_len = 10_000            # footprint can never fit
+    eng2, m2, _ = _serve(model, params, reqs, **TIER_KW)
+    assert m2.summary()["num_rejected"] == 1
+    assert eng2.kv_mgr.used_pages == 0
+
+
+# ------------------------------------------------------- routing parity
+class _MgrView:
+    """Real-replica routing view (the router's _EngineView signal shape)."""
+
+    def __init__(self, mgr, outstanding=0):
+        self.mgr, self._o = mgr, outstanding
+        self.page_size = mgr.page_size
+
+    def outstanding_tokens(self):
+        return self._o
+
+    def match_keys(self, keys):
+        return self.mgr.match_prefix_keys(keys)[0]
+
+
+def test_sim_dispatch_parity_survives_demotion():
+    """Pin promised by ``simulator._SimPrefixIndex``: the sim index is
+    tier-blind because the real ``match_prefix_keys`` reports HBM- and
+    host-resident blocks identically — so demotion never changes a real
+    routing decision, and sim-vs-real dispatch parity holds under pool
+    pressure that would diverge on an eviction-only replica."""
+    from repro.serving.router import PrefixAffinityPolicy
+    from repro.serving.simulator import _SimPrefixIndex
+
+    ids = _ids(80, 3 * PS)
+    keys = block_keys(ids, PS)
+
+    def warm_replica(host_pages):
+        mgr = _mgr(num_pages=6, host_pages=host_pages)
+        mgr.allocate(1, 3 * PS)
+        mgr.insert_prefix(1, ids)
+        mgr.free(1)
+        if host_pages:
+            _demote_all(mgr)
+        else:
+            mgr.allocate(2, 5 * PS)          # same pressure, plain eviction
+        return mgr
+
+    # sim: replica 0 indexed the prompt at routing time, never evicts
+    sim = [_SimPrefixIndex(PS), _SimPrefixIndex(PS)]
+    sim[0].insert_keys(keys)
+
+    class _SimView:
+        def __init__(self, idx, outstanding):
+            self.idx, self._o = idx, outstanding
+            self.page_size = PS
+
+        def outstanding_tokens(self):
+            return self._o
+
+        def match_keys(self, k):
+            return self.idx.match_keys(k)
+
+    policy = PrefixAffinityPolicy()
+    # replica 0 is busier: only prefix affinity keeps routing to it
+    sim_choice = policy.choose(
+        [_SimView(sim[0], 50), _SimView(sim[1], 0)], ids)
+    tiered = policy.choose(
+        [_MgrView(warm_replica(8), 50), _MgrView(_mgr(6), 0)], ids)
+    evicted = policy.choose(
+        [_MgrView(warm_replica(0), 50), _MgrView(_mgr(6), 0)], ids)
+    assert sim_choice == (0, 3 * PS)
+    assert tiered == sim_choice             # parity holds through demotion
+    assert evicted == (1, 0)                # ...and breaks without the tier
