@@ -1,12 +1,9 @@
 """Shared benchmark utilities: CSV emission, instance factories."""
 from __future__ import annotations
 
-import sys
 import time
-from typing import Iterable
 
-from repro.configs import get_config
-from repro.serving.simulator import (DisaggSim, SimConfig,
+from repro.serving.simulator import (SimConfig,
                                      make_baseline_instance,
                                      make_duet_instance)
 

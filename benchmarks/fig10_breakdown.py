@@ -41,6 +41,7 @@ def run(quick: bool = True):
     aggs = [t for t in inst.trace if t["mode"] == "aggregated"]
     emit("fig10_iterations_total", len(inst.trace))
     emit("fig10_duet_iterations", len(duets))
+    emit("fig10_aggregated_iterations", len(aggs))
     if duets:
         d = duets[0]
         emit("fig10_first_duet_k", d["k"],

@@ -11,6 +11,7 @@
 from __future__ import annotations
 
 from repro.configs import get_config
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE as PAGE_SIZE
 from repro.core import RequestLoad, RooflineModel, TPU_V5E
 from repro.core.roofline import _linear
 from benchmarks.common import DEFAULT_ARCH, emit
@@ -30,8 +31,8 @@ def linear_knee(d: int = 4096):
 
 
 # Engine-matching paged-KV geometry: attention streams whole pages, so the
-# predictor pads each request's context to a page multiple (DESIGN.md §3).
-from repro.serving.kvcache import DEFAULT_PAGE_SIZE as PAGE_SIZE
+# predictor pads each request's context to a page multiple (DESIGN.md §3) —
+# see PAGE_SIZE imported above.
 
 
 def prefill_latency_compositions(budget: int = 8192):

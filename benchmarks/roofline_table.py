@@ -108,7 +108,7 @@ def analyse(rec: dict) -> dict:
 
 def load(path: str):
     with open(path) as f:
-        return [json.loads(l) for l in f if l.strip()]
+        return [json.loads(ln) for ln in f if ln.strip()]
 
 
 def markdown_table(rows):

@@ -19,7 +19,7 @@ Block types (``block_pattern`` entries):
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 VOCAB_PAD_MULTIPLE = 256  # embedding tables padded so `model`-axis sharding divides

@@ -13,8 +13,8 @@ them unchanged.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
 
 from repro.configs.base import ArchConfig
 from repro.core.partition import ScheduleDecision, decide

@@ -14,7 +14,7 @@ prefill the rest (the paper's observation) — the enumeration keeps it exact.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 from repro.core.roofline import RequestLoad, RooflineModel
 

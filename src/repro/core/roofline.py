@@ -20,10 +20,9 @@ into the collective term (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import math
 from collections import Counter
-from dataclasses import dataclass, field
-from typing import Callable, Iterable, List, Literal, Optional
+from dataclasses import dataclass
+from typing import Iterable, Literal, Optional
 
 import numpy as np
 

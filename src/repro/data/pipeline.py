@@ -7,7 +7,7 @@ EOS separator), and yields model-ready batches for every frontend family
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -29,7 +29,6 @@ import json
 import re
 import sys
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

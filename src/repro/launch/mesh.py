@@ -83,7 +83,7 @@ def split_data_axis(mesh: Mesh) -> Tuple[Mesh, ...]:
     """
     if mesh.axis_names[-1] != "model":
         raise ValueError(
-            f"split_data_axis needs 'model' as the trailing axis, mesh has "
+            "split_data_axis needs 'model' as the trailing axis, mesh has "
             f"{tuple(mesh.axis_names)}")
     model_size = mesh.shape["model"]
     devs = mesh.devices.reshape(-1, model_size)
@@ -101,7 +101,7 @@ def split_duet_submeshes(mesh: Mesh, decode_chips: int):
     """
     if "model" not in mesh.shape:
         raise ValueError(
-            f"split_duet_submeshes needs a 'model' axis, mesh has "
+            "split_duet_submeshes needs a 'model' axis, mesh has "
             f"{tuple(mesh.axis_names)}")
     model_size = mesh.shape["model"]
     if not 0 < decode_chips < model_size:

@@ -13,8 +13,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_configs, reduced

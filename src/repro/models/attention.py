@@ -464,13 +464,16 @@ def _mla_attend(cfg, q_nope, q_rope, k_nope, v, krope, positions):
     bq = ATTN_BLOCK_Q
     pad = (-Sq) % bq
     if pad:
-        padq = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        def padq(a):
+            return jnp.pad(
+                a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
         q_nope, q_rope = padq(q_nope), padq(q_rope)
         positions = jnp.pad(positions, ((0, 0), (0, pad)),
                             constant_values=-1)
     nb = q_nope.shape[1] // bq
-    r = lambda a: a.reshape(B, nb, bq, *a.shape[2:]).transpose(
-        1, 0, 2, *range(3, a.ndim + 1))
+    def r(a):
+        return a.reshape(B, nb, bq, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
     outs = jax.lax.map(lambda xs: jax.checkpoint(core)(*xs),
                        (r(q_nope), r(q_rope), r(positions)))
     out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nb * bq, *outs.shape[3:])

@@ -113,7 +113,7 @@ def moe_ffn(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
     act = activation_fn(cfg.activation)
     if MOE_IMPL == "scatter":
         gate_vals, sid, keep = jax.vmap(
-            lambda l: route_indices(l, k, C))(logits)       # (G,Tg,k)
+            lambda lg: route_indices(lg, k, C))(logits)       # (G,Tg,k)
         gidx = jnp.arange(G)[:, None, None]
         expert_in = jnp.zeros((G, E * C, D), xg.dtype)
         src = xg[:, :, None, :] * keep[..., None].astype(xg.dtype)
@@ -127,7 +127,7 @@ def moe_ffn(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
         w = (gate_vals * keep).astype(xg.dtype)
         y = jnp.einsum("gtk,gtkd->gtd", w, gathered)
     else:
-        dispatch, combine = jax.vmap(lambda l: route(l, k, C))(logits)
+        dispatch, combine = jax.vmap(lambda lg: route(lg, k, C))(logits)
         expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(xg.dtype),
                                xg)
         h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])) \

@@ -169,7 +169,8 @@ def _slstm_layout(cfg: ArchConfig) -> dict:
 
 def _block_layout(cfg: ArchConfig, kind: str, layer_idx: int) -> dict:
     D = cfg.d_model
-    norm = lambda: ParamDef((D,), "ones", (None,))
+    def norm():
+        return ParamDef((D,), "ones", (None,))
     if kind == "attn":
         return {"attn_norm": norm(), "attn": _attn_layout(cfg),
                 "mlp_norm": norm(), "mlp": _mlp_layout(cfg, cfg.d_ff)}

@@ -69,7 +69,9 @@ def mamba2_prefill(params: dict, cfg: ArchConfig, x: jax.Array,
     L = min(CHUNK, S)
     pad = (-S) % L
     if pad:
-        zeros = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def zeros(a):
+            return jnp.pad(
+                a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
         xs, Bm, Cm, dt = zeros(xs), zeros(Bm), zeros(Cm), zeros(dt)
     Sp = S + pad
     nc = Sp // L

@@ -20,7 +20,6 @@ Cache layout per layer (list aligned with ``block_pattern``):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +30,12 @@ from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import AttnCache, MLACache
-from repro.models.layers import cross_entropy, gated_mlp, rms_norm, unembed
+from repro.models.layers import cross_entropy, gated_mlp, rms_norm
 from repro.models.moe import moe_ffn
-from repro.models.params import (_mlstm_inner, _slstm_ffn_dim, abstract_params,
-                                 axis_rules, init_params)
+from repro.models.params import (_mlstm_inner,
+                                 abstract_params,
+                                 axis_rules,
+                                 init_params)
 from repro.models.ssm import MambaCache
 from repro.models.xlstm import MLSTMCache, SLSTMCache
 
@@ -454,7 +455,6 @@ def cache_pspecs(cfg: ArchConfig, mesh: Mesh, batch: int,
     batch_ax = axes if (batch % batch_divisor == 0 and batch > 1) else None
     seq_ax = axes if batch_ax is None else None
     rules = axis_rules(cfg, mesh.shape.get("model", 1))
-    heads_ax = rules["heads"]
     ssm_heads_ax = rules["ssm_heads"]
 
     specs = []

@@ -88,15 +88,18 @@ def mlstm_prefill(params: dict, cfg: ArchConfig, x: jax.Array,
     L = min(MLSTM_CHUNK, S)
     pad = (-S) % L
     if pad:
-        pad2 = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def pad2(a):
+            return jnp.pad(
+                a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
         q, k, v = pad2(q), pad2(k), pad2(v)
         logi = jnp.pad(logi, [(0, 0), (0, pad), (0, 0)],
                        constant_values=-1e30)   # padded steps contribute 0
         logf = pad2(logf)
     Sp = S + pad
     nc = Sp // L
-    rs = lambda a: a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2,
-                                                               *range(3, a.ndim + 1))
+    def rs(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
     qc, kc, vc = rs(q), rs(k), rs(v)             # (nc,B,L,h,dh)
     lic, lfc = rs(logi), rs(logf)                # (nc,B,L,h)
 

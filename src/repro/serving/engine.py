@@ -655,7 +655,7 @@ class DuetEngine:
         (``QueueState.outstanding_loads``) plus submitted-but-unarrived
         requests. The cluster router's least-outstanding-tokens and
         prefix-affinity tie-break signal."""
-        n = sum(l.q for l in self.state.outstanding_loads())
+        n = sum(ld.q for ld in self.state.outstanding_loads())
         n += sum(r.remaining_prompt + max(0, r.output_len - r.generated)
                  for r in self._pending)
         return n

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Union
+from typing import List, Sequence, Union
 
 from repro.configs.base import GQA_KINDS, MLA_KINDS, ArchConfig
 from repro.core.multiplexer import AdaptiveMultiplexer

@@ -7,7 +7,6 @@ via device_put with the target shardings).
 from __future__ import annotations
 
 import os
-from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ decay tail).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, NamedTuple
 
 import jax
@@ -57,7 +57,8 @@ def schedule_fn(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
 
 
 def init_adamw(params) -> AdamWState:
-    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    def zeros():
+        return jax.tree.map(jnp.zeros_like, params)
     return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
 
 

@@ -12,7 +12,6 @@ import time
 from typing import Callable, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.transformer import Model
 from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,

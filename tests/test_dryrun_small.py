@@ -40,7 +40,8 @@ SCRIPT = textwrap.dedent("""
         tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
         pos = jax.ShapeDtypeStruct((B,), jnp.int32)
         dp = ("pod", "data")
-        fn = lambda p, c, t, q: model.decode_step(p, c, t, q)
+        def fn(p, c, t, q):
+            return model.decode_step(p, c, t, q)
         lowered = jax.jit(fn, in_shardings=(
             params_sh, cache_sh, NamedSharding(mesh, P(dp, None)),
             NamedSharding(mesh, P(dp)))).lower(params_abs, cache_abs, tok,
@@ -63,7 +64,8 @@ def test_small_mesh_multi_pod_lowering():
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
     results = json.loads(line[len("RESULT "):])
     assert set(results) == {"qwen3-4b", "deepseek-v2-lite-16b",
                             "zamba2-1.2b"}

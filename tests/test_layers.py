@@ -4,11 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
-from repro.models.layers import (causal_conv1d, cross_entropy, embed,
-                                 group_norm, rms_norm, unembed)
+from repro.models.layers import (causal_conv1d,
+                                 cross_entropy,
+                                 group_norm,
+                                 rms_norm,
+                                 unembed)
 from repro.models.moe import load_balance_loss, moe_ffn
 
 
@@ -63,9 +65,9 @@ def test_unembed_masks_padded_vocab():
     params = {"embedding": jnp.ones((512, 8))}
     x = jnp.ones((1, 8))
     logits = unembed(params, x, true_vocab=500)
-    l = np.asarray(logits, np.float32)
-    assert (l[:, 500:] < -1e30).all()
-    assert np.isfinite(l[:, :500]).all()
+    arr = np.asarray(logits, np.float32)
+    assert (arr[:, 500:] < -1e30).all()
+    assert np.isfinite(arr[:, :500]).all()
 
 
 def test_cross_entropy_perfect_prediction():

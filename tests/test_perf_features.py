@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.models.moe as moe_mod
 from repro.configs import get_config, reduced

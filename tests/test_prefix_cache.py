@@ -290,8 +290,9 @@ def test_preemption_recompute_resumes_from_cached_prefix(small_model):
     prompt pages. Outputs must equal the unconstrained run, refcounts must
     drain, and the recompute must be cheaper than a full replay."""
     cfg, model, params = small_model
-    mk = lambda: [Request(rid=i, arrival=0.0, prompt_len=20, output_len=12)
-                  for i in range(2)]
+    def mk():
+        return [Request(rid=i, arrival=0.0, prompt_len=20,
+                        output_len=12) for i in range(2)]
     _, ref_m, ref = _serve(model, params, mk(), max_slots=2, max_len=64,
                            token_budget=32, page_size=4,
                            kv_pool_tokens=1024, prefix_cache=True)
@@ -341,7 +342,8 @@ def test_recurrent_blocks_disable_prefix_cache():
     assert not cfg.attention_only
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(3))
-    mk = lambda: _shared_reqs(cfg, 24, [12, 12])
+    def mk():
+        return _shared_reqs(cfg, 24, [12, 12])
     with pytest.warns(UserWarning, match="prefix_cache disabled"):
         eng, m, warm = _serve(model, params, mk(), prefix_cache=True)
     assert eng.prefix_cache is False

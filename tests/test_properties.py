@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) over the system's invariants."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

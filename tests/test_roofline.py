@@ -1,5 +1,4 @@
 """Attention-aware roofline model unit tests (paper §4.1)."""
-import math
 
 import numpy as np
 import pytest

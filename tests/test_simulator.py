@@ -2,7 +2,6 @@
 qualitative claims (duet bounds TBT; disagg sacrifices throughput)."""
 import math
 
-import pytest
 
 from repro.configs import get_config
 from repro.serving.simulator import (ClusterSim, DisaggSim, SimConfig,
@@ -54,7 +53,7 @@ def test_disagg_throughput_below_aggregated():
     sim = SimConfig(units=1, tp=1)
     agg = ClusterSim(lambda i: make_baseline_instance(CFG, SimConfig(
         units=1, tp=1), "vllm"), n=2).run(reqs).summary()
-    dis = DisaggSim(CFG, SimConfig(units=1, tp=1)).run(reqs).summary()
+    dis = DisaggSim(CFG, sim).run(reqs).summary()
     assert dis["total_token_throughput"] < agg["total_token_throughput"]
 
 

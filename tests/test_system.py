@@ -1,8 +1,6 @@
 """End-to-end behaviour tests for the DuetServe system: a real trace served
 by the real engine with the adaptive multiplexer in the loop."""
 import jax
-import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import Model

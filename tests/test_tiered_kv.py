@@ -310,8 +310,9 @@ def test_tiers_drain_after_preemption_and_rejection(small_model):
     """Retire/preempt/reject must release references whatever tier their
     pages came from, and outputs must match the unconstrained run."""
     cfg, model, params = small_model
-    mk = lambda: [Request(rid=i, arrival=0.0, prompt_len=20, output_len=12)
-                  for i in range(2)]
+    def mk():
+        return [Request(rid=i, arrival=0.0, prompt_len=20,
+                        output_len=12) for i in range(2)]
     _, ref_m, ref = _serve(model, params, mk(), max_slots=2, max_len=64,
                            token_budget=32, page_size=4,
                            kv_pool_tokens=1024, prefix_cache=True)

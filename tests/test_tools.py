@@ -1,0 +1,120 @@
+"""tools/check_cli_docs.py — the docs-drift guard itself.
+
+Pins the three behaviours the CI lint-contracts job relies on, against
+synthetic parsers + doc text (no jax import needed): full scrape-vs-doc
+coverage passes, a missing flag fails, and a stale literal default
+fails while prose default cells stay out of scope.
+"""
+import argparse
+import os
+import sys
+import textwrap
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, REPO)
+
+from tools.check_cli_docs import (check, doc_defaults,  # noqa: E402
+                                  missing_flags, parser_flags,
+                                  stale_defaults)
+
+DOC = textwrap.dedent("""\
+    # CLI reference
+
+    ## `demo.serve` — serve things
+
+    | flag | default | meaning |
+    |---|---|---|
+    | `--arch` | `qwen3-4b` | architecture |
+    | `--qps` | `4.0` | arrival rate |
+    | `--paged` | on | paged execution |
+    | `--kv-pool-tokens` | `max_slots * max_len` | computed |
+    | `--out` | — | optional path |
+
+    ## `demo.bench` — benchmarks
+
+    | flag | default | meaning |
+    |---|---|---|
+    | `--arch` | `all` | suite selector |
+    | `--out` | `BENCH_<YYYY-MM-DD>.json` | artifact path |
+""")
+
+
+def serve_parser(qps_default=4.0):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-4b")
+    p.add_argument("--qps", type=float, default=qps_default)
+    p.add_argument("--paged", action="store_true", default=True)
+    p.add_argument("--kv-pool-tokens", type=int, default=None)
+    p.add_argument("--out", default=None)
+    return p
+
+
+def bench_parser():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--out", default="BENCH_2026-01-01.json")
+    return p
+
+
+def parsers():
+    return [("serve", "demo.serve", serve_parser()),
+            ("bench", "demo.bench", bench_parser())]
+
+
+def test_flags_and_defaults_in_sync_pass():
+    missing, stale = check(DOC, parsers())
+    assert missing == [] and stale == []
+
+
+def test_parser_flags_excludes_help():
+    flags = parser_flags(serve_parser())
+    assert "--help" not in flags
+    assert set(flags) == {"--arch", "--qps", "--paged",
+                          "--kv-pool-tokens", "--out"}
+
+
+def test_missing_flag_detected():
+    p = serve_parser()
+    p.add_argument("--brand-new-flag", type=int, default=3)
+    missing = missing_flags(p, DOC)
+    assert missing == ["--brand-new-flag"]
+
+
+def test_missing_flag_word_boundary():
+    # `--out` in the doc must not satisfy a new `--output` flag
+    p = argparse.ArgumentParser()
+    p.add_argument("--output")
+    assert missing_flags(p, DOC) == ["--output"]
+
+
+def test_stale_literal_default_detected():
+    # doc says 4.0, parser now defaults to 8.0 -> drift
+    stale = stale_defaults(serve_parser(qps_default=8.0),
+                           doc_defaults(DOC, "demo.serve"))
+    assert stale == [("--qps", "4.0", "8.0")]
+
+
+def test_prose_and_computed_defaults_out_of_scope():
+    # `on` (store_true), `max_slots * max_len` (expression), `—` (dash)
+    # and None defaults must never be compared as literals
+    stale = stale_defaults(serve_parser(),
+                           doc_defaults(DOC, "demo.serve"))
+    assert stale == []
+
+
+def test_defaults_are_section_scoped():
+    # --arch documents different defaults per CLI section; each parser
+    # is held to its own section's cell, not the other's
+    assert doc_defaults(DOC, "demo.serve")["--arch"] == "qwen3-4b"
+    assert doc_defaults(DOC, "demo.bench")["--arch"] == "all"
+    assert stale_defaults(bench_parser(),
+                          doc_defaults(DOC, "demo.bench")) == []
+
+
+def test_check_reports_per_cli_label():
+    p = serve_parser(qps_default=9.9)
+    triples = [("serve", "demo.serve", p),
+               ("bench", "demo.bench", bench_parser())]
+    missing, stale = check(DOC, triples)
+    assert missing == []
+    assert stale == [("serve", "--qps", "4.0", "9.9")]

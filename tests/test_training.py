@@ -23,7 +23,7 @@ def test_loss_decreases():
     opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=25)
     _, _, hist = train(model, params, data, opt, num_steps=25, log_every=5,
                        log_fn=lambda *_: None)
-    losses = [l for _, l in hist]
+    losses = [loss for _, loss in hist]
     assert losses[-1] < losses[0] - 0.5
 
 

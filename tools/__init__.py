@@ -1,0 +1,1 @@
+"""Repo tooling: docs-drift guard and the duetlint contract analyzer."""

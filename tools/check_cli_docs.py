@@ -1,23 +1,38 @@
 #!/usr/bin/env python
-"""Docs-drift guard: every CLI flag must appear in docs/CLI.md.
+"""Docs-drift guard: docs/CLI.md must match the argparse parsers.
 
-Scrapes the argparse parsers of ``repro.launch.serve``,
-``repro.launch.dryrun`` and ``benchmarks.run`` and asserts each long option
-string occurs verbatim in ``docs/CLI.md``. Run from the repo root with
-``PYTHONPATH=src`` (the CI docs-guard step does); exits non-zero listing
-any undocumented flags, so a new flag cannot land without its docs.
+Scrapes the parsers of ``repro.launch.serve``, ``repro.launch.dryrun``
+and ``benchmarks.run`` and asserts, per CLI section of ``docs/CLI.md``:
+
+* **coverage** — every long option string occurs verbatim in the doc, so
+  a new flag cannot land undocumented;
+* **freshness** — where a doc table row states a *literal* default
+  (a bare word/number in the second column), it equals the parser's
+  actual default. Prose cells (``off``, ``—``, ``max_slots * max_len``,
+  ``follows `--paged```), store_true flags and ``None``/computed
+  defaults are out of scope — only checkably-literal claims are checked.
+
+Run from the repo root with ``PYTHONPATH=src`` (the CI lint-contracts
+job does); exits non-zero listing every missing flag and stale default.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import re
 import sys
+from typing import Dict, List, Tuple
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 sys.path.insert(0, REPO)
 
 DOC = os.path.join(REPO, "docs", "CLI.md")
+
+# doc table row: | `--flag` | <default cell> | <meaning> |
+_ROW = re.compile(r"^\|\s*`(--[\w-]+)`[^|]*\|\s*(.*?)\s*\|")
+# a default cell we can hold the parser to: one bare word/number
+_SIMPLE = re.compile(r"^[\w.+-]+$")
 
 
 def parser_flags(parser) -> list:
@@ -30,35 +45,99 @@ def parser_flags(parser) -> list:
     return flags
 
 
-def main() -> int:
+def doc_section(doc: str, section_key: str) -> str:
+    """The ``## `` block of the doc whose heading mentions section_key."""
+    blocks = re.split(r"(?m)^## ", doc)
+    for block in blocks[1:]:
+        heading = block.splitlines()[0]
+        if section_key in heading:
+            return block
+    return ""
+
+
+def doc_defaults(doc: str, section_key: str) -> Dict[str, str]:
+    """flag -> stated default cell (backticks stripped) for one CLI."""
+    defaults: Dict[str, str] = {}
+    for line in doc_section(doc, section_key).splitlines():
+        m = _ROW.match(line)
+        if m and m.group(1) not in defaults:
+            defaults[m.group(1)] = m.group(2).replace("`", "")
+    return defaults
+
+
+def missing_flags(parser, doc: str) -> List[str]:
+    """Flags absent from the doc (word-boundary match, whole file)."""
+    missing = []
+    for flag in parser_flags(parser):
+        # word-boundary match so e.g. `--out` is not satisfied by a
+        # mention of `--output`
+        if not re.search(re.escape(flag) + r"(?![\w-])", doc):
+            missing.append(flag)
+    return missing
+
+
+def stale_defaults(parser, defaults: Dict[str, str]) -> List[Tuple]:
+    """(flag, documented, actual) where a literal doc default is wrong."""
+    stale = []
+    for action in parser._actions:           # noqa: SLF001
+        for opt in action.option_strings:
+            if not opt.startswith("--") or opt == "--help":
+                continue
+            cell = defaults.get(opt)
+            if cell is None or not _SIMPLE.match(cell):
+                continue                     # undocumented here, or prose
+            if getattr(action, "nargs", None) == 0:
+                continue                     # store_true/false: on/off prose
+            if action.default is None or \
+                    action.default is argparse.SUPPRESS:
+                continue                     # computed / absent default
+            if str(action.default) != cell:
+                stale.append((opt, cell, str(action.default)))
+    return stale
+
+
+def check(doc: str, parsers: List[Tuple[str, str, object]]) -> Tuple:
+    """(missing, stale) across (label, section_key, parser) triples."""
+    missing, stale = [], []
+    for label, key, parser in parsers:
+        missing.extend((label, f) for f in missing_flags(parser, doc))
+        stale.extend((label,) + s
+                     for s in stale_defaults(parser, doc_defaults(doc, key)))
+    return missing, stale
+
+
+def load_parsers() -> List[Tuple[str, str, object]]:
     from benchmarks.run import build_parser as bench_parser
     from repro.launch.dryrun import build_parser as dryrun_parser
     from repro.launch.serve import build_parser as serve_parser
+    return [("serve.py", "repro.launch.serve", serve_parser()),
+            ("dryrun.py", "repro.launch.dryrun", dryrun_parser()),
+            ("benchmarks/run.py", "benchmarks/run.py", bench_parser())]
 
+
+def main() -> int:
     if not os.path.exists(DOC):
         print(f"docs drift: {DOC} does not exist", file=sys.stderr)
         return 1
     doc = open(DOC).read()
-
-    missing = []
-    for cli, parser in (("serve.py", serve_parser()),
-                        ("dryrun.py", dryrun_parser()),
-                        ("benchmarks/run.py", bench_parser())):
-        for flag in parser_flags(parser):
-            # word-boundary match so e.g. `--out` is not satisfied by a
-            # mention of `--output`
-            if not re.search(re.escape(flag) + r"(?![\w-])", doc):
-                missing.append((cli, flag))
+    parsers = load_parsers()
+    missing, stale = check(doc, parsers)
 
     if missing:
         print("docs drift: flags missing from docs/CLI.md:",
               file=sys.stderr)
         for cli, flag in missing:
             print(f"  {cli}: {flag}", file=sys.stderr)
+    if stale:
+        print("docs drift: stale defaults in docs/CLI.md:", file=sys.stderr)
+        for cli, flag, documented, actual in stale:
+            print(f"  {cli}: {flag} documented as `{documented}` "
+                  f"but defaults to `{actual}`", file=sys.stderr)
+    if missing or stale:
         return 1
-    n = sum(len(parser_flags(p)) for p in
-            (serve_parser(), dryrun_parser(), bench_parser()))
-    print(f"docs/CLI.md covers all {n} CLI flags")
+    n = sum(len(parser_flags(p)) for _, _, p in parsers)
+    print(f"docs/CLI.md covers all {n} CLI flags; "
+          "all literal defaults verified")
     return 0
 
 

@@ -1,0 +1,20 @@
+"""duetlint: contract-aware static analysis for the duet serving stack.
+
+Pure stdlib ``ast``/CFG analysis — no jax import — enforcing the
+engine's device-program invariants at the source level: host-sync
+discipline, tier-transition exhaustiveness, lock/refcount balance,
+recompilation hazards, donation-after-use, and Pallas kernel hygiene.
+
+Run with ``python -m tools.duetlint [paths]`` (defaults to ``src``);
+see ``docs/LINTING.md`` for the rule catalog.
+"""
+from __future__ import annotations
+
+__version__ = "0.1.0"
+
+from .core import (DEFAULT_CONFIG, Finding, Module, Project, Report, Rule,
+                   load_baseline, run, write_baseline)
+
+__all__ = ["DEFAULT_CONFIG", "Finding", "Module", "Project", "Report",
+           "Rule", "load_baseline", "run", "write_baseline",
+           "__version__"]

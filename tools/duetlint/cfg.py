@@ -1,0 +1,252 @@
+"""Statement-level control-flow graphs for duetlint's path rules.
+
+Builds one CFG per function: nodes are statements plus a synthetic entry
+and exit; edges follow control flow including loop back-edges, ``break``/
+``continue``, and exception edges (every statement inside a ``try`` body
+gets an edge to each handler's entry, since any of them may raise).
+
+``finally`` blocks are over-approximated: every path into them (normal
+fall-through, early ``return``/``raise`` from the guarded block) is routed
+through the ``finally`` body, and the body is additionally given an edge
+to the function exit. That admits a few paths that cannot occur at
+runtime, which is the safe direction for a "must pass a release on every
+path" barrier query — spurious paths can only produce extra findings,
+never hide one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, List, Optional
+
+ENTRY = "<entry>"
+EXIT = "<exit>"
+
+
+class Node:
+    __slots__ = ("id", "stmt", "succs")
+
+    def __init__(self, nid: int, stmt):
+        self.id = nid
+        self.stmt = stmt              # ast.stmt, ENTRY, or EXIT
+        self.succs: List[int] = []
+
+
+class CFG:
+    def __init__(self):
+        self.nodes: List[Node] = []
+        self.entry = self._new(ENTRY)
+        self.exit = self._new(EXIT)
+
+    def _new(self, stmt) -> int:
+        node = Node(len(self.nodes), stmt)
+        self.nodes.append(node)
+        return node.id
+
+    def connect(self, a: int, b: int) -> None:
+        if b not in self.nodes[a].succs:
+            self.nodes[a].succs.append(b)
+
+    def path_avoiding(self, barrier: Callable[[ast.stmt], bool]) -> \
+            Optional[List[ast.stmt]]:
+        """A path entry->exit whose statements all fail *barrier*, or None.
+
+        Returns the statement list of one witness path (synthetic nodes
+        elided) so the caller can point at where control escapes.
+        """
+        stack = [(self.entry, [self.entry])]
+        seen = set()
+        while stack:
+            nid, path = stack.pop()
+            if nid == self.exit:
+                return [self.nodes[i].stmt for i in path
+                        if self.nodes[i].stmt not in (ENTRY, EXIT)]
+            if nid in seen:
+                continue
+            seen.add(nid)
+            for nxt in self.nodes[nid].succs:
+                stmt = self.nodes[nxt].stmt
+                if stmt not in (ENTRY, EXIT) and barrier(stmt):
+                    continue
+                stack.append((nxt, path + [nxt]))
+        return None
+
+
+class _Frame:
+    """Loop / handler / finally context during construction."""
+
+    def __init__(self, loop_header=None, loop_exit=None,
+                 handlers=None, finally_entry=None):
+        self.loop_header = loop_header
+        self.loop_exit = loop_exit
+        self.handlers = handlers or []      # entry node ids of live handlers
+        self.finally_entry = finally_entry
+
+
+class _Builder:
+    def __init__(self, fn: ast.AST):
+        self.cfg = CFG()
+        ends = self._block(getattr(fn, "body", []), [self.cfg.entry],
+                           _Frame())
+        for e in ends:
+            self.cfg.connect(e, self.cfg.exit)
+
+    # -- helpers ----------------------------------------------------------
+    def _terminal_target(self, ctx: _Frame) -> int:
+        """Where a return/raise goes: through finally if one is live."""
+        return (ctx.finally_entry if ctx.finally_entry is not None
+                else self.cfg.exit)
+
+    def _stmt_node(self, stmt, ends: List[int], ctx: _Frame) -> int:
+        nid = self.cfg._new(stmt)
+        for e in ends:
+            self.cfg.connect(e, nid)
+        for h in ctx.handlers:
+            self.cfg.connect(nid, h)
+        return nid
+
+    # -- block ------------------------------------------------------------
+    def _block(self, stmts, ends: List[int], ctx: _Frame) -> List[int]:
+        for stmt in stmts:
+            if not ends:
+                break               # unreachable tail
+            ends = self._stmt(stmt, ends, ctx)
+        return ends
+
+    def _stmt(self, stmt, ends: List[int], ctx: _Frame) -> List[int]:
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            nid = self._stmt_node(stmt, ends, ctx)
+            self.cfg.connect(nid, self._terminal_target(ctx))
+            return []
+        if isinstance(stmt, ast.Break):
+            nid = self._stmt_node(stmt, ends, ctx)
+            if ctx.loop_exit is not None:
+                self.cfg.connect(nid, ctx.loop_exit)
+            return []
+        if isinstance(stmt, ast.Continue):
+            nid = self._stmt_node(stmt, ends, ctx)
+            if ctx.loop_header is not None:
+                self.cfg.connect(nid, ctx.loop_header)
+            return []
+        if isinstance(stmt, ast.If):
+            nid = self._stmt_node(stmt, ends, ctx)
+            then_ends = self._block(stmt.body, [nid], ctx)
+            else_ends = (self._block(stmt.orelse, [nid], ctx)
+                         if stmt.orelse else [nid])
+            return then_ends + else_ends
+        if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            header = self._stmt_node(stmt, ends, ctx)
+            exit_join = self.cfg._new(stmt)     # join point after the loop
+            loop_ctx = _Frame(loop_header=header, loop_exit=exit_join,
+                              handlers=ctx.handlers,
+                              finally_entry=ctx.finally_entry)
+            body_ends = self._block(stmt.body, [header], loop_ctx)
+            for e in body_ends:
+                self.cfg.connect(e, header)     # back edge
+            self.cfg.connect(header, exit_join)  # zero-trip / loop done
+            else_ends = (self._block(stmt.orelse, [exit_join], ctx)
+                         if stmt.orelse else [exit_join])
+            return else_ends
+        if isinstance(stmt, ast.Try):
+            return self._try(stmt, ends, ctx)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            nid = self._stmt_node(stmt, ends, ctx)
+            return self._block(stmt.body, [nid], ctx)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            # nested defs: a single opaque node, body not part of this CFG
+            return [self._stmt_node(stmt, ends, ctx)]
+        return [self._stmt_node(stmt, ends, ctx)]
+
+    def _try(self, stmt: ast.Try, ends: List[int], ctx: _Frame) -> List[int]:
+        handler_entries = [self.cfg._new(h) for h in stmt.handlers]
+        finally_entry = (self.cfg._new(stmt) if stmt.finalbody else None)
+        body_ctx = _Frame(loop_header=ctx.loop_header,
+                          loop_exit=ctx.loop_exit,
+                          handlers=ctx.handlers + handler_entries,
+                          finally_entry=(finally_entry
+                                         if finally_entry is not None
+                                         else ctx.finally_entry))
+        body_ends = self._block(stmt.body, ends, body_ctx)
+        if stmt.orelse:
+            body_ends = self._block(stmt.orelse, body_ends, body_ctx)
+        handler_ctx = _Frame(loop_header=ctx.loop_header,
+                             loop_exit=ctx.loop_exit,
+                             handlers=ctx.handlers,
+                             finally_entry=(finally_entry
+                                            if finally_entry is not None
+                                            else ctx.finally_entry))
+        all_ends = list(body_ends)
+        for h, entry in zip(stmt.handlers, handler_entries):
+            all_ends += self._block(h.body, [entry], handler_ctx)
+        if finally_entry is None:
+            return all_ends
+        for e in all_ends:
+            self.cfg.connect(e, finally_entry)
+        fin_ends = self._block(stmt.finalbody, [finally_entry], ctx)
+        for e in fin_ends:
+            # a finally entered via return/raise continues to the exit
+            self.cfg.connect(e, self.cfg.exit)
+        return fin_ends
+
+
+def build(fn: ast.AST) -> CFG:
+    """CFG for a FunctionDef/AsyncFunctionDef."""
+    return _Builder(fn).cfg
+
+
+def walk_stmt_exprs(stmt: ast.stmt):
+    """Expressions of a statement without descending into nested defs."""
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return
+    for child in ast.iter_child_nodes(stmt):
+        if isinstance(child, ast.expr):
+            yield from ast.walk(child)
+        elif isinstance(child, (ast.withitem,)):
+            yield from ast.walk(child)
+
+
+class StatementVisitor:
+    """Ordered, branch-union statement walker shared by the taint rules.
+
+    Subclasses override ``enter_stmt``; branching constructs process each
+    branch on a copy of the mutable state and merge with ``merge_states``.
+    """
+
+    def fork_state(self):
+        raise NotImplementedError
+
+    def merge_states(self, states) -> None:
+        raise NotImplementedError
+
+    def enter_stmt(self, stmt: ast.stmt) -> None:
+        raise NotImplementedError
+
+    def visit_body(self, stmts) -> None:
+        for stmt in stmts:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        self.enter_stmt(stmt)
+        if isinstance(stmt, ast.If):
+            branches = [stmt.body, stmt.orelse]
+        elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            branches = [stmt.body + stmt.orelse]
+        elif isinstance(stmt, ast.Try):
+            branches = ([stmt.body + stmt.orelse]
+                        + [h.body for h in stmt.handlers])
+            branches = [b + stmt.finalbody for b in branches]
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            branches = [stmt.body]
+        else:
+            return
+        snapshots = []
+        base = self.fork_state()
+        for branch in branches:
+            self.restore_state(base)
+            self.visit_body(branch)
+            snapshots.append(self.fork_state())
+        self.merge_states(snapshots)
+
+    def restore_state(self, state) -> None:
+        raise NotImplementedError

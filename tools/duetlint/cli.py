@@ -1,0 +1,96 @@
+"""duetlint command line.
+
+Exit codes: 0 = clean (all findings baselined/suppressed), 1 = new
+findings (or a stale-baseline entry under --strict-baseline), 2 = usage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from .core import Project, load_baseline, run, write_baseline
+from .rules import ALL_RULES, get_rules
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.duetlint",
+        description="contract-aware static analysis for the duet engines")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to analyze (default: src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated subset of rules to run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--report", default=None,
+                    help="also write a JSON findings report to this path")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="fail on stale baseline entries too")
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name:20s} {rule.description}")
+        return 0
+
+    rule_names = [r.strip() for r in args.rules.split(",") if r.strip()]
+    rules = get_rules(rule_names)
+    paths: List[str] = list(args.paths) or ["src"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"duetlint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    project = Project.from_paths(paths)
+    baseline = ([] if (args.no_baseline or args.write_baseline)
+                else load_baseline(args.baseline))
+    report = run(project, rules, baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, report.findings)
+        print(f"duetlint: wrote {len(report.findings)} entries to "
+              f"{args.baseline} — fill in the justifications")
+        return 0
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(report.to_json(), fh, indent=2)
+
+    if args.format == "json":
+        json.dump(report.to_json(), sys.stdout, indent=2)
+        print()
+    else:
+        for f in report.findings:
+            print(f.render())
+        for e in report.stale_baseline:
+            print("duetlint: stale baseline entry (fixed? remove it): "
+                  f"[{e['rule']}] {e['path']}: {e['message']}",
+                  file=sys.stderr)
+        summary = (f"duetlint: {len(report.findings)} finding(s), "
+                   f"{len(report.baselined)} baselined, "
+                   f"{report.suppressed} suppressed, "
+                   f"{report.files} file(s)")
+        print(summary, file=sys.stderr)
+
+    if report.findings:
+        return 1
+    if args.strict_baseline and report.stale_baseline:
+        return 1
+    return 0

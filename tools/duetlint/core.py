@@ -1,0 +1,351 @@
+"""duetlint core: findings, module model, suppressions, baseline, runner.
+
+The analyzer is pure stdlib ``ast`` — it never imports the code under
+analysis, so it runs before any heavyweight deps are installed (the CI
+``lint-contracts`` job relies on this).
+
+A finding's identity for baseline purposes is ``(rule, path, symbol,
+message)`` — deliberately line-free so that unrelated edits above a
+grandfathered site do not invalidate the baseline.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import os
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+
+# ---------------------------------------------------------------------------
+# findings
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative posix path (or as-given for externals)
+    line: int
+    col: int
+    symbol: str        # enclosing qualname, or "<module>"
+    message: str
+
+    def key(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.symbol, self.message)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.symbol}: {self.message}")
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "symbol": self.symbol,
+                "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by rules
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.device_get`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def int_tuple_literal(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """``(1, 2, 3)`` / ``1`` as a tuple of ints, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, ast.Tuple):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)):
+                return None
+            out.append(el.value)
+        return tuple(out)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# module model
+
+
+_DISABLE = "duetlint:"
+
+
+def _parse_suppressions(source: str) -> Dict[int, Set[str]]:
+    """line -> set of rule names disabled on that line ('*' = all)."""
+    out: Dict[int, Set[str]] = {}
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            text = tok.string.lstrip("#").strip()
+            if not text.startswith(_DISABLE):
+                continue
+            directive = text[len(_DISABLE):].strip()
+            if directive.startswith("disable-next="):
+                rules, line = directive[len("disable-next="):], tok.start[0] + 1
+            elif directive.startswith("disable="):
+                rules, line = directive[len("disable="):], tok.start[0]
+            else:
+                continue
+            names = {r.strip() for r in rules.split(",") if r.strip()}
+            out.setdefault(line, set()).update(names or {"*"})
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+class Module:
+    """One parsed source file plus per-line suppressions and parent links."""
+
+    def __init__(self, path: str, source: str, rel: Optional[str] = None):
+        self.abspath = os.path.abspath(path)
+        if rel is not None:
+            self.path = rel
+        else:
+            try:
+                relpath = os.path.relpath(self.abspath, REPO_ROOT)
+            except ValueError:      # different drive (windows)
+                relpath = path
+            self.path = (relpath if not relpath.startswith("..")
+                         else path).replace(os.sep, "/")
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.suppressions = _parse_suppressions(source)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    def qualname(self, node: ast.AST) -> str:
+        """Dotted name of the enclosing function/class scope of *node*."""
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = self._parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def functions(self) -> Iterable[ast.AST]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    def classes(self) -> Iterable[ast.ClassDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                yield node
+
+    def suppressed(self, finding: Finding) -> bool:
+        rules = self.suppressions.get(finding.line)
+        return bool(rules) and ("*" in rules or finding.rule in rules)
+
+
+# ---------------------------------------------------------------------------
+# project + config
+
+DEFAULT_CONFIG: dict = {
+    "host-sync": {
+        # engine stepping paths (suffix match on posix path)
+        "hot_modules": ("serving/engine.py", "serving/async_engine.py",
+                        "core/lookahead.py"),
+        # the ONE batched fetch site allowed to device_get (qualname suffix)
+        "allowed_sites": ("AsyncDuetEngine._drain_record",),
+        # self.<attr> reads that are device values
+        "device_attrs": ("pools", "cache", "d_last_tok", "d_pos", "d_key",
+                         "params", "logits"),
+    },
+    "tier-transitions": {
+        "modules": ("serving/kvcache.py",),
+        "table_name": "_TIER_TRANSITIONS",
+        "setter_name": "_set_tier",
+        "state_attrs": ("_tier", "page_tier"),
+    },
+    "lock-balance": {
+        "modules": ("serving/engine.py", "serving/async_engine.py"),
+        "manager_attr": "kv_mgr",
+        "acquire_methods": ("lock_prefix", "allocate", "reserve_lookahead"),
+        "release_method": "free",
+        "release_triple": ("_retire", "_preempt", "_reject"),
+    },
+    "recompile-hazard": {
+        "modules": ("serving/engine.py", "serving/async_engine.py",
+                    "core/lookahead.py"),
+        "cache_attr_suffixes": ("_programs", "_decode_fns", "_cache",
+                                "_fns"),
+        "bucket_fn_markers": ("bucket", "width"),
+        "key_var_names": ("key",),
+    },
+    "donation-after-use": {},
+    "pallas-hygiene": {
+        "modules": ("kernels/",),     # substring match
+    },
+}
+
+
+def merge_config(overrides: Optional[dict]) -> dict:
+    cfg = {k: dict(v) for k, v in DEFAULT_CONFIG.items()}
+    for rule, section in (overrides or {}).items():
+        cfg.setdefault(rule, {}).update(section)
+    return cfg
+
+
+def path_matches(path: str, patterns: Sequence[str]) -> bool:
+    """Suffix match for file patterns, substring match for dir/ patterns."""
+    p = path.replace(os.sep, "/")
+    for pat in patterns:
+        if pat.endswith("/"):
+            if pat in p or p.startswith(pat):
+                return True
+        elif p.endswith(pat):
+            return True
+    return False
+
+
+class Project:
+    """All modules under analysis plus the effective rule config."""
+
+    def __init__(self, modules: List[Module], config: Optional[dict] = None):
+        self.modules = modules
+        self.config = merge_config(config)
+        self.cache: dict = {}      # scratch space for cross-rule prepasses
+
+    @classmethod
+    def from_paths(cls, paths: Sequence[str],
+                   config: Optional[dict] = None) -> "Project":
+        files: List[str] = []
+        for p in paths:
+            if os.path.isdir(p):
+                for root, dirs, names in os.walk(p):
+                    dirs[:] = sorted(d for d in dirs
+                                     if d not in ("__pycache__", ".git"))
+                    files.extend(os.path.join(root, n)
+                                 for n in sorted(names)
+                                 if n.endswith(".py"))
+            elif p.endswith(".py"):
+                files.append(p)
+        modules = []
+        for f in files:
+            with open(f, encoding="utf-8") as fh:
+                src = fh.read()
+            try:
+                modules.append(Module(f, src))
+            except SyntaxError as exc:
+                raise SystemExit(f"duetlint: cannot parse {f}: {exc}")
+        return cls(modules, config)
+
+
+# ---------------------------------------------------------------------------
+# rule base + registry
+
+
+class Rule:
+    name = "base"
+    description = ""
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def section(self, project: Project) -> dict:
+        return project.config.get(self.name, {})
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+def load_baseline(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    entries = data.get("entries", data if isinstance(data, list) else [])
+    for e in entries:
+        if not e.get("justification"):
+            raise SystemExit(
+                f"duetlint: baseline entry without justification: {e}")
+    return entries
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "symbol": f.symbol,
+                "message": f.message,
+                "justification": "TODO: justify or fix"}
+               for f in sorted(set(findings), key=lambda f: f.key())]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"entries": entries}, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# runner
+
+
+@dataclass
+class Report:
+    findings: List[Finding] = field(default_factory=list)   # unbaselined
+    baselined: List[Finding] = field(default_factory=list)
+    suppressed: int = 0
+    stale_baseline: List[dict] = field(default_factory=list)
+    files: int = 0
+
+    def to_json(self) -> dict:
+        return {
+            "files": self.files,
+            "findings": [f.to_json() for f in self.findings],
+            "baselined": [f.to_json() for f in self.baselined],
+            "suppressed": self.suppressed,
+            "stale_baseline": self.stale_baseline,
+        }
+
+
+def run(project: Project, rules: Sequence[Rule],
+        baseline_entries: Sequence[dict] = ()) -> Report:
+    report = Report(files=len(project.modules))
+    base_keys = {(e["rule"], e["path"], e["symbol"], e["message"])
+                 for e in baseline_entries}
+    hit_keys = set()
+    for module in project.modules:
+        for rule in rules:
+            for f in rule.check(module, project):
+                if module.suppressed(f):
+                    report.suppressed += 1
+                elif f.key() in base_keys:
+                    hit_keys.add(f.key())
+                    report.baselined.append(f)
+                else:
+                    report.findings.append(f)
+    report.stale_baseline = [e for e in baseline_entries
+                             if (e["rule"], e["path"], e["symbol"],
+                                 e["message"]) not in hit_keys]
+    report.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return report

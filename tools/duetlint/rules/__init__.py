@@ -1,0 +1,32 @@
+"""duetlint rule registry."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from ..core import Rule
+from .donation import DonationAfterUseRule
+from .host_sync import HostSyncRule
+from .lock_balance import LockBalanceRule
+from .pallas_hygiene import PallasHygieneRule
+from .recompile_hazard import RecompileHazardRule
+from .tier_transitions import TierTransitionsRule
+
+ALL_RULES: List[Rule] = [
+    HostSyncRule(),
+    TierTransitionsRule(),
+    LockBalanceRule(),
+    RecompileHazardRule(),
+    DonationAfterUseRule(),
+    PallasHygieneRule(),
+]
+
+
+def get_rules(names: Sequence[str] = ()) -> List[Rule]:
+    if not names:
+        return list(ALL_RULES)
+    by_name = {r.name: r for r in ALL_RULES}
+    missing = [n for n in names if n not in by_name]
+    if missing:
+        raise SystemExit(f"duetlint: unknown rule(s): {', '.join(missing)} "
+                         f"(known: {', '.join(sorted(by_name))})")
+    return [by_name[n] for n in names]

@@ -1,0 +1,249 @@
+"""Rule 5: donation-after-use.
+
+``make_superiter_fn`` and friends return ``jax.jit(..., donate_argnums=
+(...))`` callables: the buffers passed at donated positions are consumed —
+their device memory is reused for the outputs — so any read after the
+call sees garbage (or raises on a deleted buffer).
+
+The rule resolves *donating factories* project-wide with a fixed point:
+
+* a function that returns (directly or via a local) a ``jax.jit`` call
+  carrying ``donate_argnums`` is a factory; its donated positions are the
+  union of integer-tuple literals reaching that kwarg in its scope,
+* a function that returns the result of calling a known factory is
+  itself a factory with the same positions (this catches the engines'
+  ``_program`` indirection through ``make_superiter_fn``).
+
+Then, per function, a linear scan: variables bound to a factory call are
+donating callables; at each invocation, the ``Name`` / ``self.attr``
+arguments at donated positions become *consumed* — unless the very same
+statement rebinds them (the sanctioned tuple-unpack rebind idiom). Any
+later read of a consumed buffer is flagged; any rebind clears it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core import (Finding, Module, Project, Rule, call_name, dotted_name,
+                    int_tuple_literal, kwarg)
+
+_CACHE_KEY = "donation/factories"
+
+
+def _donate_positions(fn: ast.AST, jit_call: ast.Call) -> Tuple[int, ...]:
+    """Union of int-tuple literals reaching the donate_argnums kwarg."""
+    val = kwarg(jit_call, "donate_argnums")
+    if val is None:
+        return ()
+    direct = int_tuple_literal(val)
+    if direct is not None:
+        return direct
+    if not isinstance(val, ast.Name):
+        return ()
+    union: Set[int] = set()
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign) and \
+                any(isinstance(t, ast.Name) and t.id == val.id
+                    for t in sub.targets):
+            for node in ast.walk(sub.value):
+                lit = int_tuple_literal(node)
+                if lit is not None:
+                    union.update(lit)
+    return tuple(sorted(union))
+
+
+def _jit_call_with_donation(node: ast.AST) -> Optional[ast.Call]:
+    if isinstance(node, ast.Call) and \
+            (call_name(node) or "").endswith("jax.jit") and \
+            kwarg(node, "donate_argnums") is not None:
+        return node
+    return None
+
+
+def _factories(project: Project) -> Dict[str, Tuple[int, ...]]:
+    """function name -> donated positions, resolved to a fixed point."""
+    if _CACHE_KEY in project.cache:
+        return project.cache[_CACHE_KEY]
+    fns = []
+    for module in project.modules:
+        fns.extend(module.functions())
+
+    factories: Dict[str, Tuple[int, ...]] = {}
+
+    def returned_exprs(fn):
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Return) and sub.value is not None:
+                yield sub.value
+
+    # pass A: direct jax.jit(..., donate_argnums=...) factories
+    for fn in fns:
+        for ret in returned_exprs(fn):
+            jit = _jit_call_with_donation(ret)
+            if jit is None and isinstance(ret, ast.Name):
+                # returned local assigned from a donating jit call
+                for sub in ast.walk(fn):
+                    if isinstance(sub, ast.Assign) and \
+                            any(isinstance(t, ast.Name) and t.id == ret.id
+                                for t in sub.targets):
+                        jit = _jit_call_with_donation(sub.value) or jit
+            if jit is not None:
+                pos = _donate_positions(fn, jit)
+                if pos:
+                    factories[fn.name] = tuple(
+                        sorted(set(factories.get(fn.name, ())) | set(pos)))
+
+    # pass B: transitive factories (return <known factory>(...))
+    changed = True
+    while changed:
+        changed = False
+        for fn in fns:
+            if fn.name in factories:
+                continue
+            for ret in returned_exprs(fn):
+                call = ret if isinstance(ret, ast.Call) else None
+                if call is None and isinstance(ret, ast.Name):
+                    for sub in ast.walk(fn):
+                        if isinstance(sub, ast.Assign) and \
+                                isinstance(sub.value, ast.Call) and \
+                                any(isinstance(t, ast.Name) and
+                                    t.id == ret.id for t in sub.targets):
+                            call = sub.value
+                if call is None:
+                    continue
+                leaf = (call_name(call) or "").split(".")[-1]
+                if leaf in factories:
+                    factories[fn.name] = factories[leaf]
+                    changed = True
+                    break
+    project.cache[_CACHE_KEY] = factories
+    return factories
+
+
+def _ref(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    name = dotted_name(node)
+    if name and name.startswith("self."):
+        return name
+    return None
+
+
+class DonationAfterUseRule(Rule):
+    name = "donation-after-use"
+    description = ("reads of a buffer after it was passed at a "
+                   "donate_argnums position")
+
+    def check(self, module: Module, project: Project):
+        factories = _factories(project)
+        findings: List[Finding] = []
+        for fn in module.functions():
+            findings.extend(self._check_fn(module, fn, factories))
+        return findings
+
+    # ------------------------------------------------------------------
+    def _check_fn(self, module, fn, factories) -> List[Finding]:
+        out: List[Finding] = []
+        donating_vars: Dict[str, Tuple[int, ...]] = {}
+        consumed: Dict[str, str] = {}       # ref -> callee name
+
+        def factory_positions(call: ast.Call) -> Tuple[int, ...]:
+            """Donated positions of the callable *returned* by this call."""
+            leaf = (call_name(call) or "").split(".")[-1]
+            if leaf in factories:
+                return factories[leaf]
+            jit = _jit_call_with_donation(call)
+            if jit is not None:
+                return _donate_positions(fn, jit)
+            return ()
+
+        def positions_of(call: ast.Call) -> Tuple[int, ...]:
+            """Donated positions consumed by invoking this call's func.
+
+            A factory call itself consumes nothing — donation applies to
+            the callable it returns, so only invocations of a bound
+            donating variable or of `factory(...)(...)` /
+            `jax.jit(...)(...)` directly consume their args.
+            """
+            if isinstance(call.func, ast.Name) and \
+                    call.func.id in donating_vars:
+                return donating_vars[call.func.id]
+            if isinstance(call.func, ast.Call):
+                return factory_positions(call.func)
+            return ()
+
+        def scan_reads(node: ast.AST, skip: ast.AST = None):
+            for sub in ast.walk(node):
+                if sub is skip:
+                    continue
+                r = _ref(sub)
+                if r in consumed and isinstance(sub, (ast.Name,
+                                                      ast.Attribute)):
+                    if isinstance(getattr(sub, "ctx", None), ast.Load):
+                        out.append(Finding(
+                            rule=self.name, path=module.path,
+                            line=sub.lineno, col=sub.col_offset,
+                            symbol=module.qualname(sub),
+                            message=(f"`{r}` read after being donated to "
+                                     f"{consumed[r]}(); its buffer was "
+                                     "consumed — rebind it from the "
+                                     "call's outputs first")))
+                        del consumed[r]     # one report per consumption
+
+        def record_calls(node: ast.AST):
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                pos = positions_of(sub)
+                for p in pos:
+                    if p < len(sub.args):
+                        r = _ref(sub.args[p])
+                        if r is not None:
+                            consumed[r] = ((call_name(sub) or "<jit fn>")
+                                           .split(".")[-1])
+
+        def clear_targets(targets):
+            for t in targets:
+                elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) \
+                    else [t]
+                for el in elts:
+                    r = _ref(el)
+                    if r is not None:
+                        consumed.pop(r, None)
+
+        # linear statement order matters: walk the body recursively in
+        # source order rather than ast.walk's breadth-first order.
+        def visit(stmts):
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef, ast.ClassDef)):
+                    continue
+                if isinstance(stmt, ast.Assign):
+                    scan_reads(stmt.value)
+                    record_calls(stmt.value)
+                    # factory-call bindings: v = self._program(...)
+                    if isinstance(stmt.value, ast.Call):
+                        pos = factory_positions(stmt.value)
+                        if pos:
+                            for t in stmt.targets:
+                                if isinstance(t, ast.Name):
+                                    donating_vars[t.id] = pos
+                    clear_targets(stmt.targets)
+                elif isinstance(stmt, ast.AugAssign):
+                    scan_reads(stmt.value)
+                    record_calls(stmt.value)
+                elif isinstance(stmt, (ast.Expr, ast.Return)) and \
+                        stmt.value is not None:
+                    scan_reads(stmt.value)
+                    record_calls(stmt.value)
+                else:
+                    for child in ast.iter_child_nodes(stmt):
+                        if isinstance(child, ast.expr):
+                            scan_reads(child)
+                            record_calls(child)
+                for attr in ("body", "orelse", "finalbody"):
+                    visit(getattr(stmt, attr, []) or [])
+                for h in getattr(stmt, "handlers", []) or []:
+                    visit(h.body)
+        visit(fn.body)
+        return out

@@ -1,0 +1,232 @@
+"""Rule 1: host-sync discipline in the engine stepping paths.
+
+The interruption-free contract (PAPER.md §4.3) requires at most one
+host↔device synchronization per super-iteration. Inside the hot modules
+this rule flags every construct that forces a blocking device read:
+
+* ``jax.device_get(...)`` anywhere except the allowlisted batched fetch
+  site (``AsyncDuetEngine._drain_record``),
+* ``x.block_until_ready()``,
+* ``x.item()`` on a device value,
+* ``int(x)`` / ``float(x)`` / ``bool(x)`` on a device value,
+* ``np.asarray(x)`` / ``np.array(x)`` on a device value.
+
+"Device value" is a per-function linear taint: results of ``jnp.*`` /
+``jax.*`` calls, reads of known device attributes (``self.pools``,
+``self.cache``, ...), and every target of a tuple-unpack whose targets
+include a device attribute (the donated-buffer rebind idiom). Converting
+to host (``np.asarray``, ``jax.device_get``) clears the taint of the
+assigned target, so downstream host-side uses are not re-flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..core import Finding, Module, Project, Rule, call_name
+from ..cfg import StatementVisitor
+
+# jax.* calls that do NOT put their result on device / do not sync
+_NONDEVICE_JAX = {
+    "jax.device_get", "jax.jit", "jax.named_scope", "jax.tree_util",
+    "jax.random.PRNGKey", "jax.ShapeDtypeStruct", "jax.eval_shape",
+}
+_NP_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                  "onp.asarray", "onp.array"}
+_SCALAR_CASTS = {"int", "float", "bool"}
+
+
+def _src(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<expr>"
+
+
+class _FnScan(StatementVisitor):
+    def __init__(self, rule: "HostSyncRule", module: Module,
+                 fn: ast.AST, cfg: dict):
+        self.rule = rule
+        self.module = module
+        self.fn = fn
+        self.cfg = cfg
+        self.qual = module.qualname(fn.body[0] if fn.body else fn)
+        self.allowed = any(self.qual.endswith(site)
+                           for site in cfg["allowed_sites"])
+        self.device_attrs = set(cfg["device_attrs"])
+        self.tainted: Set[str] = set()
+        self.findings: List[Finding] = []
+
+    # -- state plumbing ---------------------------------------------------
+    def fork_state(self):
+        return set(self.tainted)
+
+    def restore_state(self, state):
+        self.tainted = set(state)
+
+    def merge_states(self, states):
+        merged: Set[str] = set()
+        for s in states:
+            merged |= s
+        self.tainted = merged
+
+    # -- taint queries ----------------------------------------------------
+    def _ref(self, node: ast.AST):
+        """Canonical taint key for a Name / self.attr, else None."""
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self":
+            return f"self.{node.attr}"
+        return None
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self" and node.attr in self.device_attrs:
+            return True
+        ref = self._ref(node)
+        if ref is not None:
+            return ref in self.tainted
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name in _NP_CONVERTERS or any(
+                    name == n or name.startswith(n + ".")
+                    for n in _NONDEVICE_JAX):
+                return False
+            if name.startswith(("jnp.", "jax.", "lax.")):
+                return True
+            # method call on a tainted object (e.g. x.astype(...))
+            if isinstance(node.func, ast.Attribute) and \
+                    self.is_tainted(node.func.value):
+                return True
+            return False
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Attribute):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        return False
+
+    # -- finding emission -------------------------------------------------
+    def flag(self, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=self.rule.name, path=self.module.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            symbol=self.qual, message=message))
+
+    def scan_expr(self, node: ast.AST) -> None:
+        """Flag sync constructs anywhere inside *node* (pre-order)."""
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = call_name(sub) or ""
+            if name == "jax.device_get":
+                if not self.allowed:
+                    self.flag(sub, "jax.device_get outside the allowlisted "
+                                   "batched fetch site")
+            elif isinstance(sub.func, ast.Attribute):
+                attr = sub.func.attr
+                if attr == "block_until_ready":
+                    self.flag(sub, "block_until_ready() blocks the "
+                                   "dispatch pipeline")
+                elif attr == "item" and self.is_tainted(sub.func.value):
+                    self.flag(sub, ".item() on device value "
+                                   f"`{_src(sub.func.value)}` forces a "
+                                   "host sync")
+            if name in _SCALAR_CASTS and sub.args and \
+                    self.is_tainted(sub.args[0]):
+                self.flag(sub, f"{name}() on device value "
+                               f"`{_src(sub.args[0])}` forces a host sync")
+            elif name in _NP_CONVERTERS and sub.args and \
+                    self.is_tainted(sub.args[0]):
+                self.flag(sub, f"{name}() on device value "
+                               f"`{_src(sub.args[0])}` forces a host sync")
+
+    # -- statement handling ----------------------------------------------
+    def _assign(self, targets, value) -> None:
+        self.scan_expr(value)
+        value_tainted = self.is_tainted(value)
+        # np/device_get conversions yield host values even though flagged
+        if isinstance(value, ast.Call):
+            name = call_name(value) or ""
+            if name in _NP_CONVERTERS or name == "jax.device_get":
+                value_tainted = False
+        flat: List[ast.AST] = []
+        for t in targets:
+            flat.extend(t.elts if isinstance(t, (ast.Tuple, ast.List))
+                        else [t])
+        unpack_hits_device_attr = any(
+            isinstance(t, ast.Attribute) and
+            isinstance(t.value, ast.Name) and t.value.id == "self" and
+            t.attr in self.device_attrs
+            for t in flat)
+        taint_all = value_tainted or (
+            unpack_hits_device_attr and isinstance(value, ast.Call))
+        for t in flat:
+            ref = self._ref(t)
+            if ref is None:
+                continue
+            if taint_all:
+                self.tainted.add(ref)
+            else:
+                self.tainted.discard(ref)
+
+    def enter_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            self._assign(stmt.targets, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._assign([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            self.scan_expr(stmt.value)
+            ref = self._ref(stmt.target)
+            if ref is not None and self.is_tainted(stmt.value):
+                self.tainted.add(ref)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.scan_expr(stmt.iter)
+            if self.is_tainted(stmt.iter):
+                ref = self._ref(stmt.target)
+                if ref is not None:
+                    self.tainted.add(ref)
+        elif isinstance(stmt, ast.If) or isinstance(stmt, ast.While):
+            self.scan_expr(stmt.test)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.scan_expr(item.context_expr)
+        elif isinstance(stmt, (ast.Expr, ast.Return)) and \
+                stmt.value is not None:
+            self.scan_expr(stmt.value)
+        elif isinstance(stmt, ast.Assert):
+            self.scan_expr(stmt.test)
+        elif isinstance(stmt, ast.Raise) and stmt.exc is not None:
+            self.scan_expr(stmt.exc)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass        # nested scopes get their own scan
+
+
+class HostSyncRule(Rule):
+    name = "host-sync"
+    description = ("blocking host↔device syncs in the engine stepping "
+                   "paths (one batched fetch site allowed)")
+
+    def check(self, module: Module, project: Project):
+        cfg = self.section(project)
+        from ..core import path_matches
+        if not path_matches(module.path, cfg["hot_modules"]):
+            return []
+        findings: List[Finding] = []
+        for fn in module.functions():
+            scan = _FnScan(self, module, fn, cfg)
+            scan.visit_body(fn.body)
+            findings.extend(scan.findings)
+        return findings

@@ -1,0 +1,132 @@
+"""Rule 3: lock/refcount balance across the engine release triple.
+
+``lock_prefix`` / ``allocate`` / ``reserve_lookahead`` acquire pages or
+prefix refcounts against the KV manager; the engines balance them through
+exactly three release paths — ``_retire``, ``_preempt`` and ``_reject``,
+each of which must call ``kv_mgr.free(...)`` on **every** exit, including
+exception edges.
+
+The check walks a statement-level CFG (see ``cfg.py``) per release
+method: if any entry→exit path avoids a ``kv_mgr.free`` call, the path is
+reported with the line where control escapes. Classes that acquire but do
+not define (or inherit, one level of project-resolvable bases) the full
+triple are flagged too.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .. import cfg as cfglib
+from ..core import (Finding, Module, Project, Rule, call_name,
+                    path_matches)
+
+
+def _method_calls(node: ast.AST, manager_attr: str, methods) -> bool:
+    """Does *node* contain a call ``[self.]<manager_attr>.<m>(...)``?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub) or ""
+            parts = name.split(".")
+            if len(parts) >= 2 and parts[-2] == manager_attr and \
+                    parts[-1] in methods:
+                return True
+    return False
+
+
+def _stmt_calls(stmt: ast.stmt, manager_attr: str, methods) -> bool:
+    """_method_calls restricted to the statement's own expressions.
+
+    A compound statement (If/For/Try/...) is one CFG node for its
+    *header* only — its body statements are separate nodes, so a release
+    call nested in the body must not make the header a barrier.
+    """
+    for expr in cfglib.walk_stmt_exprs(stmt):
+        if isinstance(expr, ast.Call):
+            name = call_name(expr) or ""
+            parts = name.split(".")
+            if len(parts) >= 2 and parts[-2] == manager_attr and \
+                    parts[-1] in methods:
+                return True
+    return False
+
+
+def _class_index(project: Project) -> Dict[str, tuple]:
+    key = "lock-balance/classes"
+    if key not in project.cache:
+        idx: Dict[str, tuple] = {}
+        for module in project.modules:
+            for cls in module.classes():
+                idx.setdefault(cls.name, (module, cls))
+        project.cache[key] = idx
+    return project.cache[key]
+
+
+def _resolve_method(cls: ast.ClassDef, name: str,
+                    index: Dict[str, tuple], depth: int = 0):
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                stmt.name == name:
+            return cls, stmt
+    if depth >= 3:
+        return None
+    for base in cls.bases:
+        base_name = base.id if isinstance(base, ast.Name) else None
+        if base_name and base_name in index:
+            found = _resolve_method(index[base_name][1], name, index,
+                                    depth + 1)
+            if found:
+                return found
+    return None
+
+
+class LockBalanceRule(Rule):
+    name = "lock-balance"
+    description = ("every engine class that acquires KV pages/refcounts "
+                   "must release via kv_mgr.free on all paths of the "
+                   "_retire/_preempt/_reject triple")
+
+    def check(self, module: Module, project: Project):
+        cfg = self.section(project)
+        if not path_matches(module.path, cfg["modules"]):
+            return []
+        manager = cfg["manager_attr"]
+        acquires = set(cfg["acquire_methods"])
+        release = cfg["release_method"]
+        triple = cfg["release_triple"]
+        index = _class_index(project)
+        findings: List[Finding] = []
+
+        for cls in module.classes():
+            if not _method_calls(cls, manager, acquires):
+                continue
+            for method_name in triple:
+                resolved = _resolve_method(cls, method_name, index)
+                if resolved is None:
+                    findings.append(Finding(
+                        rule=self.name, path=module.path,
+                        line=cls.lineno, col=cls.col_offset,
+                        symbol=cls.name,
+                        message=("class acquires KV references via "
+                                 f"{manager}.{{{'/'.join(sorted(acquires))}}}"
+                                 f" but defines no {method_name}() "
+                                 "release path")))
+                    continue
+                owner, fn = resolved
+                if owner is not cls:
+                    continue    # inherited; checked where it is defined
+                graph = cfglib.build(fn)
+                witness = graph.path_avoiding(
+                    lambda s: _stmt_calls(s, manager, {release}))
+                if witness is not None:
+                    escape = witness[-1] if witness else fn
+                    findings.append(Finding(
+                        rule=self.name, path=module.path,
+                        line=fn.lineno, col=fn.col_offset,
+                        symbol=f"{cls.name}.{method_name}",
+                        message=(f"{method_name}() has an exit path that "
+                                 f"never calls {manager}.{release}(); "
+                                 "acquired pages/refcounts leak (path "
+                                 "escapes via line "
+                                 f"{getattr(escape, 'lineno', '?')})")))
+        return findings

@@ -1,0 +1,132 @@
+"""Rule 6: Pallas kernel hygiene in ``kernels/``.
+
+Two classes of silent-wrong-answer bugs in Pallas TPU kernels:
+
+* ``pl.load`` / ``pl.store`` without a ``mask=`` keyword — on ragged
+  dimensions the unmasked lanes read/write out-of-bounds garbage,
+* grid / BlockSpec mismatches against the declared specs: an index-map
+  lambda whose arity differs from ``grid rank + num_scalar_prefetch``,
+  or whose returned index tuple length differs from the block shape —
+  both lower to wrong addressing, not to an error.
+
+Grid tuples assigned to a local (``grid = (heads, blocks)``) are
+resolved through the enclosing function.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..core import (Finding, Module, Project, Rule, call_name, kwarg,
+                    path_matches)
+
+
+def _tuple_len(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Tuple):
+        return len(node.elts)
+    return None
+
+
+class PallasHygieneRule(Rule):
+    name = "pallas-hygiene"
+    description = ("unmasked pl.load/pl.store and grid/BlockSpec "
+                   "mismatches in kernels/")
+
+    def check(self, module: Module, project: Project):
+        cfg = self.section(project)
+        if not path_matches(module.path, cfg["modules"]):
+            return []
+        findings: List[Finding] = []
+
+        def flag(node, msg):
+            findings.append(Finding(
+                rule=self.name, path=module.path,
+                line=getattr(node, "lineno", 0),
+                col=getattr(node, "col_offset", 0),
+                symbol=module.qualname(node), message=msg))
+
+        self._check_scope(module.tree, flag)
+        return findings
+
+    # ------------------------------------------------------------------
+    def _resolve(self, scope: ast.AST, node: ast.AST) -> ast.AST:
+        """Follow one level of `name = <literal>` in the scope."""
+        if not isinstance(node, ast.Name):
+            return node
+        for sub in ast.walk(scope):
+            if isinstance(sub, ast.Assign) and \
+                    any(isinstance(t, ast.Name) and t.id == node.id
+                        for t in sub.targets):
+                return sub.value
+        return node
+
+    def _check_scope(self, scope, flag) -> None:
+        for sub in ast.walk(scope):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = call_name(sub) or ""
+            leaf = name.split(".")[-1]
+            if name in ("pl.load", "pl.store"):
+                if kwarg(sub, "mask") is None:
+                    flag(sub, f"{name} without mask= — unmasked lanes on "
+                              "a ragged dim read/write out of bounds")
+            if leaf == "pallas_call":
+                self._check_pallas_call(scope, sub, flag)
+
+    # ------------------------------------------------------------------
+    def _check_pallas_call(self, scope, call: ast.Call, flag) -> None:
+        grid_rank: Optional[int] = None
+        prefetch = 0
+        specs: List[ast.AST] = []
+
+        grid_spec = kwarg(call, "grid_spec")
+        if grid_spec is not None and isinstance(grid_spec, ast.Call):
+            npf = kwarg(grid_spec, "num_scalar_prefetch")
+            if isinstance(npf, ast.Constant) and \
+                    isinstance(npf.value, int):
+                prefetch = npf.value
+            grid = self._resolve(scope, kwarg(grid_spec, "grid"))
+            grid_rank = _tuple_len(grid)
+            for key in ("in_specs", "out_specs"):
+                val = kwarg(grid_spec, key)
+                if isinstance(val, (ast.List, ast.Tuple)):
+                    specs.extend(val.elts)
+                elif val is not None:
+                    specs.append(val)
+        else:
+            grid = self._resolve(scope, kwarg(call, "grid")) \
+                if kwarg(call, "grid") is not None else None
+            grid_rank = _tuple_len(grid) if grid is not None else None
+            for key in ("in_specs", "out_specs"):
+                val = kwarg(call, key)
+                if isinstance(val, (ast.List, ast.Tuple)):
+                    specs.extend(val.elts)
+                elif val is not None:
+                    specs.append(val)
+
+        for spec in specs:
+            if not (isinstance(spec, ast.Call) and
+                    (call_name(spec) or "").split(".")[-1] == "BlockSpec"):
+                continue
+            block_shape = spec.args[0] if spec.args else \
+                kwarg(spec, "block_shape")
+            index_map = spec.args[1] if len(spec.args) > 1 else \
+                kwarg(spec, "index_map")
+            if not isinstance(index_map, ast.Lambda):
+                continue
+            arity = len(index_map.args.args)
+            if grid_rank is not None and \
+                    arity != grid_rank + prefetch:
+                flag(index_map,
+                     f"BlockSpec index map takes {arity} args but the "
+                     f"grid has rank {grid_rank} with {prefetch} scalar-"
+                     "prefetch operand(s) — expected "
+                     f"{grid_rank + prefetch}")
+            ret_len = _tuple_len(index_map.body)
+            shape_len = _tuple_len(block_shape) if block_shape is not None \
+                else None
+            if ret_len is not None and shape_len is not None and \
+                    ret_len != shape_len:
+                flag(index_map,
+                     f"BlockSpec index map returns {ret_len} indices for "
+                     f"a rank-{shape_len} block shape")

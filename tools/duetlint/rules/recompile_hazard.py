@@ -1,0 +1,175 @@
+"""Rule 4: recompilation hazards in dispatch-cache keys and jit statics.
+
+The engines memoize compiled programs in dicts keyed on shape buckets
+(``_k_bucket`` / ``_table_width``); a raw shape, raw ``len()`` or device
+value in such a key makes every new request shape a cache miss and a
+recompile — exactly the stall the duet schedule cannot absorb.
+
+Flags, inside the configured modules:
+
+* unhashable displays (list/set/dict/comprehension) in dispatch-cache
+  key tuples,
+* ``<expr>.shape`` used directly as a key element (bucket it first),
+* bare ``len(...)`` key elements not wrapped in a bucketing helper
+  (a function whose name contains ``bucket`` or ``width``),
+* ``jnp.* / jax.*`` device values in key elements,
+* the same hazards in literal values passed at ``static_argnums``
+  positions of a locally-built ``jax.jit`` callable.
+
+Key tuples are found two ways: subscripts/`.get`/`in` tests against
+attributes that look like dispatch caches (``self._programs`` etc.), and
+tuple literals assigned to a variable named ``key`` in those modules.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from ..core import (Finding, Module, Project, Rule, call_name, dotted_name,
+                    path_matches)
+
+_UNHASHABLE = (ast.List, ast.Set, ast.Dict, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+
+
+class RecompileHazardRule(Rule):
+    name = "recompile-hazard"
+    description = ("unhashable / unbucketed / device values in dispatch-"
+                   "cache keys and jit static arguments")
+
+    def check(self, module: Module, project: Project):
+        cfg = self.section(project)
+        if not path_matches(module.path, cfg["modules"]):
+            return []
+        self._cfg = cfg
+        self._module = module
+        findings: List[Finding] = []
+
+        for fn in module.functions():
+            findings.extend(self._check_fn(fn))
+        return findings
+
+    # ------------------------------------------------------------------
+    def _is_cache_attr(self, node: ast.AST) -> bool:
+        name = dotted_name(node) or ""
+        leaf = name.split(".")[-1]
+        return any(leaf == s or leaf.endswith(s)
+                   for s in self._cfg["cache_attr_suffixes"])
+
+    def _flag(self, out: List[Finding], node: ast.AST, msg: str) -> None:
+        out.append(Finding(
+            rule=self.name, path=self._module.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            symbol=self._module.qualname(node), message=msg))
+
+    def _check_key_expr(self, out: List[Finding], el: ast.AST,
+                        context: str) -> None:
+        if isinstance(el, _UNHASHABLE):
+            self._flag(out, el, "unhashable "
+                       f"{type(el).__name__.lower()} in {context}")
+            return
+        if isinstance(el, ast.IfExp):
+            self._check_key_expr(out, el.body, context)
+            self._check_key_expr(out, el.orelse, context)
+            return
+        if isinstance(el, ast.Attribute) and el.attr == "shape":
+            self._flag(out, el, f"raw `.shape` in {context}; a new shape "
+                       "per request means a recompile per request — "
+                       "bucket it first")
+            return
+        if isinstance(el, ast.Call):
+            name = call_name(el) or ""
+            leaf = name.split(".")[-1]
+            if any(m in leaf.lower()
+                   for m in self._cfg["bucket_fn_markers"]):
+                return      # bucketed — the sanctioned pattern
+            if name == "len":
+                self._flag(out, el, f"raw len() in {context}; wrap it in "
+                           "a bucketing helper")
+                return
+            if name.startswith(("jnp.", "jax.", "lax.")):
+                self._flag(out, el, f"device value `{name}(...)` in "
+                           f"{context}; hashing a traced/device value "
+                           "recompiles (or raises) per call")
+            return
+        if isinstance(el, ast.BinOp):
+            self._check_key_expr(out, el.left, context)
+            self._check_key_expr(out, el.right, context)
+
+    def _key_elements(self, node: ast.AST) -> Iterable[ast.AST]:
+        if isinstance(node, ast.Tuple):
+            return node.elts
+        return [node]
+
+    def _resolve_key_var(self, fn: ast.AST,
+                         name: str) -> Optional[ast.AST]:
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and \
+                    any(isinstance(t, ast.Name) and t.id == name
+                        for t in sub.targets):
+                return sub.value
+        return None
+
+    # ------------------------------------------------------------------
+    def _check_fn(self, fn: ast.AST) -> List[Finding]:
+        out: List[Finding] = []
+        jit_statics = {}        # local name -> static positions
+
+        for sub in ast.walk(fn):
+            # --- dispatch-cache accesses ---------------------------------
+            key_expr = None
+            if isinstance(sub, ast.Subscript) and \
+                    self._is_cache_attr(sub.value):
+                key_expr = sub.slice
+            elif isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr == "get" and \
+                    self._is_cache_attr(sub.func.value) and sub.args:
+                key_expr = sub.args[0]
+            elif isinstance(sub, ast.Compare) and \
+                    any(isinstance(op, (ast.In, ast.NotIn))
+                        for op in sub.ops) and \
+                    any(self._is_cache_attr(c) for c in sub.comparators):
+                key_expr = sub.left
+            if key_expr is not None:
+                if isinstance(key_expr, ast.Name):
+                    resolved = self._resolve_key_var(fn, key_expr.id)
+                    key_expr = resolved     # None if a parameter: skip
+                if key_expr is not None:
+                    for el in self._key_elements(key_expr):
+                        self._check_key_expr(out, el,
+                                             "dispatch-cache key")
+
+            # --- `key = (...)` tuple assignments -------------------------
+            if isinstance(sub, ast.Assign) and \
+                    isinstance(sub.value, ast.Tuple) and \
+                    any(isinstance(t, ast.Name) and
+                        t.id in self._cfg["key_var_names"]
+                        for t in sub.targets):
+                for el in sub.value.elts:
+                    self._check_key_expr(out, el, "dispatch-cache key")
+
+            # --- jax.jit static args -------------------------------------
+            if isinstance(sub, ast.Assign) and \
+                    isinstance(sub.value, ast.Call) and \
+                    (call_name(sub.value) or "") == "jax.jit":
+                for kw in sub.value.keywords:
+                    if kw.arg == "static_argnums":
+                        from ..core import int_tuple_literal
+                        pos = int_tuple_literal(kw.value)
+                        if pos:
+                            for t in sub.targets:
+                                if isinstance(t, ast.Name):
+                                    jit_statics[t.id] = pos
+
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Name) and \
+                    sub.func.id in jit_statics:
+                for pos in jit_statics[sub.func.id]:
+                    if pos < len(sub.args):
+                        self._check_key_expr(
+                            out, sub.args[pos],
+                            f"jit static argument {pos}")
+        return out

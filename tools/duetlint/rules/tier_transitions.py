@@ -1,0 +1,135 @@
+"""Rule 2: tier-transition exhaustiveness in the KV page lifecycle.
+
+``kvcache.py`` validates every tier move against the ``_TIER_TRANSITIONS``
+edge set at runtime. This rule makes the cross-check static:
+
+* every ``_set_tier(page, <target>)`` call site must pass a constant
+  ``PageTier.X`` target (non-constant targets defeat the static check),
+* the target must have at least one inbound edge in the table (otherwise
+  the call raises unconditionally at runtime),
+* every edge declared in the table must be exercised by some call site
+  (a dead edge means the table and the code have drifted apart),
+* direct writes to the tier state (``self._tier[...] = ...`` or
+  ``obj.page_tier = ...``) anywhere outside the setter itself or
+  ``__init__`` bypass validation entirely.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from ..core import (Finding, Module, Project, Rule, call_name, dotted_name,
+                    path_matches)
+
+
+def _tier_attr(node: ast.AST) -> Optional[str]:
+    """``PageTier.HBM_ACTIVE`` -> ``HBM_ACTIVE``."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name):
+        return node.attr
+    return None
+
+
+def _find_table(module: Module, table_name: str):
+    """The ``_TIER_TRANSITIONS`` set literal: edges + the assign node."""
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and \
+                any(isinstance(t, ast.Name) and t.id == table_name
+                    for t in node.targets):
+            if not isinstance(node.value, (ast.Set, ast.Tuple, ast.List)):
+                return None, node
+            edges: Set[Tuple[str, str]] = set()
+            for el in node.value.elts:
+                if isinstance(el, ast.Tuple) and len(el.elts) == 2:
+                    old, new = (_tier_attr(el.elts[0]),
+                                _tier_attr(el.elts[1]))
+                    if old and new:
+                        edges.add((old, new))
+            return edges, node
+    return None, None
+
+
+class TierTransitionsRule(Rule):
+    name = "tier-transitions"
+    description = ("static cross-check of _set_tier call sites against "
+                   "the _TIER_TRANSITIONS table; direct tier writes "
+                   "bypassing the setter")
+
+    def check(self, module: Module, project: Project):
+        cfg = self.section(project)
+        if not path_matches(module.path, cfg["modules"]):
+            return []
+        setter = cfg["setter_name"]
+        state_attrs = set(cfg["state_attrs"])
+        findings: List[Finding] = []
+
+        def flag(node, msg):
+            findings.append(Finding(
+                rule=self.name, path=module.path,
+                line=getattr(node, "lineno", 0),
+                col=getattr(node, "col_offset", 0),
+                symbol=module.qualname(node), message=msg))
+
+        edges, table_node = _find_table(module, cfg["table_name"])
+        if table_node is None:
+            return []       # module declares no transition table
+        if edges is None:
+            flag(table_node, f"{cfg['table_name']} is not a literal edge "
+                             "set; cannot check transitions statically")
+            return findings
+
+        # --- call sites of the setter ---------------------------------
+        targets_seen: Set[str] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if not name.split(".")[-1] == setter:
+                    continue
+                if len(node.args) < 2:
+                    continue
+                target = _tier_attr(node.args[1])
+                if target is None:
+                    flag(node, f"{setter}() target is not a constant "
+                               "PageTier member; transition cannot be "
+                               "checked statically")
+                    continue
+                targets_seen.add(target)
+                if not any(new == target for _, new in edges):
+                    flag(node, f"{setter}(..., PageTier.{target}) has no "
+                               f"inbound edge in {cfg['table_name']}; "
+                               "this call raises at runtime")
+
+        # --- dead edges ------------------------------------------------
+        for old, new in sorted(edges):
+            if new not in targets_seen:
+                flag(table_node,
+                     f"declared transition ({old} -> {new}) has no "
+                     f"{setter}() call site targeting {new}; table and "
+                     "code have drifted")
+
+        # --- direct tier-state writes ----------------------------------
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                continue
+            tgts = (node.targets if isinstance(node, ast.Assign)
+                    else [node.target])
+            for t in tgts:
+                written = None
+                if isinstance(t, ast.Subscript):
+                    base = dotted_name(t.value) or ""
+                    if base.split(".")[-1] in state_attrs:
+                        written = base
+                elif isinstance(t, ast.Attribute) and \
+                        t.attr in state_attrs and \
+                        not isinstance(node.value, (ast.Dict, ast.List,
+                                                    ast.Call)):
+                    written = dotted_name(t)
+                if written is None:
+                    continue
+                qual = module.qualname(node)
+                fn_name = qual.split(".")[-1]
+                if fn_name in (setter, "__init__"):
+                    continue
+                flag(node, f"direct write to tier state `{written}` "
+                           f"bypasses {setter}() validation")
+        return findings
