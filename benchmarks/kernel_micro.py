@@ -1,0 +1,154 @@
+"""Kernel-vs-jnp microbenchmarks for the Pallas serving kernels (ISSUE 9).
+
+Sweeps the paged decode hot spot over context length x batch x page size,
+with the flash-decoding split-KV variant on/off, against the pure-jnp
+gather oracle (``repro.kernels.ref``), plus one paged fused duet row. A
+TP=2 leg times the shard_map-wrapped kernel when the process has >= 2
+devices (run directly: two host devices are forced; under
+``benchmarks/run.py`` the leg skips with a pointer if the topology is
+single-device).
+
+Off-TPU the Pallas rows execute in interpret mode, so absolute us/call is
+a correctness-weighted trajectory signal (BENCH_<date>.json), not a device
+roofline — the jnp rows are the comparable baseline across runs.
+
+Usage:
+  PYTHONPATH=src python benchmarks/kernel_micro.py
+"""
+from __future__ import annotations
+
+try:                                     # package import (benchmarks/run.py)
+    from benchmarks._env import maybe_force_host_devices
+except ImportError:                      # direct execution
+    from _env import maybe_force_host_devices
+
+maybe_force_host_devices(__name__ == "__main__")
+
+import numpy as np
+
+try:
+    from benchmarks.common import emit, timed
+except ImportError:
+    from common import emit, timed
+
+QUICK_SWEEP = [
+    # (batch, ctx, page_size)
+    (1, 128, 16),
+    (4, 128, 16),
+    (4, 512, 16),
+    (4, 512, 32),
+]
+FULL_SWEEP = QUICK_SWEEP + [
+    (8, 1024, 16),
+    (8, 2048, 16),
+    (16, 512, 16),
+]
+HEADS = (4, 2, 64)   # (H, G, Dh) — the reduced qwen3-class attention shape
+
+
+def _pool(rng_key, B, ctx, ps):
+    import jax
+
+    H, G, Dh = HEADS
+    P = -(-ctx // ps)
+    N = B * P + 1
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, H, Dh), jnp_dtype())
+    kp = jax.random.normal(ks[1], (N, ps, G, Dh), jnp_dtype())
+    vp = jax.random.normal(ks[2], (N, ps, G, Dh), jnp_dtype())
+    tables = (1 + np.arange(B * P, dtype=np.int32)).reshape(B, P)
+    lengths = np.full((B,), ctx, np.int32)
+    import jax.numpy as jnp
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(lengths)
+
+
+def jnp_dtype():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+def _us(fn, *args):
+    import jax
+
+    _, dt = timed(lambda: jax.block_until_ready(fn(*args)))
+    return dt * 1e6
+
+
+def _decode_sweep(sweep):
+    import jax
+
+    from repro.kernels import paged_decode, paged_decode_splitkv
+    from repro.kernels.ref import paged_decode_ref
+
+    ref_jit = jax.jit(paged_decode_ref)
+    for B, ctx, ps in sweep:
+        args = _pool(jax.random.PRNGKey(0), B, ctx, ps)
+        tag = f"B{B}_ctx{ctx}_ps{ps}"
+        t_jnp = _us(ref_jit, *args)
+        t_pal = _us(lambda *a: paged_decode(*a, interpret=None), *args)
+        emit(f"kernel/paged_decode_jnp_{tag}_us", t_jnp)
+        emit(f"kernel/paged_decode_pallas_{tag}_us", t_pal,
+             f"x{t_jnp / max(t_pal, 1e-9):.2f}_vs_jnp")
+        # split-KV long-context leg: partition each page chain 4 ways
+        t_spl = _us(lambda *a: paged_decode_splitkv(
+            *a, num_splits=4, interpret=None), *args)
+        emit(f"kernel/paged_decode_splitkv4_{tag}_us", t_spl,
+             f"x{t_pal / max(t_spl, 1e-9):.2f}_vs_plain")
+
+
+def _duet_row():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import build_duet_schedule, duet_attention_paged
+    from repro.kernels.ref import duet_attention_paged_ref
+
+    from repro.kernels import pack_duet_queries
+
+    B, chunk, ctx, ps = 4, 16, 256, 16
+    q4, kp, vp, tables, _ = _pool(jax.random.PRNGKey(1), B, ctx, ps)
+    rows = [(b, ctx - 1) for b in range(B - 1)] \
+        + [(B - 1, i) for i in range(chunk)]
+    sched = build_duet_schedule(rows[:B - 1], rows[B - 1:], block_q=1)
+    src_q = jax.random.normal(jax.random.PRNGKey(2),
+                              (len(rows),) + q4.shape[1:])
+    q = pack_duet_queries(sched, src_q)
+    pos = jnp.asarray(sched.row_pos)[:, None]
+    t_ref = _us(jax.jit(duet_attention_paged_ref), src_q,
+                jnp.asarray([r[0] for r in rows]),
+                jnp.asarray([r[1] for r in rows]), kp, vp, tables)
+    t_pal = _us(lambda: duet_attention_paged(
+        q, pos, jnp.asarray(sched.tile_slot), kp, vp, tables,
+        block_q=1, interpret=None))
+    emit("kernel/duet_paged_jnp_us", t_ref)
+    emit("kernel/duet_paged_pallas_us", t_pal,
+         f"x{t_ref / max(t_pal, 1e-9):.2f}_vs_jnp")
+
+
+def _sharded_row():
+    import jax
+
+    if len(jax.devices()) < 2:
+        print("# kernel_micro: TP=2 leg skipped (single-device topology; "
+              "run this module directly to force 2 host devices)")
+        return
+    from repro.configs import get_config, reduced
+    from repro.core.device import DeviceContext
+    from repro.kernels import paged_decode_sharded
+
+    cfg = reduced(get_config("qwen3-4b"))
+    ctx2 = DeviceContext.for_shape(cfg, tp=2)
+    args = _pool(jax.random.PRNGKey(3), 4, 256, 16)
+    t = _us(lambda *a: paged_decode_sharded(
+        *a, mesh=ctx2.mesh, interpret=True), *args)
+    emit("kernel/paged_decode_sharded_tp2_B4_ctx256_us", t)
+
+
+def run(quick: bool = True):
+    _decode_sweep(QUICK_SWEEP if quick else FULL_SWEEP)
+    _duet_row()
+    _sharded_row()
+
+
+if __name__ == "__main__":
+    run(quick=False)

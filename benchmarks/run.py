@@ -35,10 +35,11 @@ def main(argv=None) -> None:
                             fig2_agg_vs_disagg, fig3_partition_scaling,
                             fig6_end_to_end, fig7_multichip,
                             fig8_roofline_accuracy, fig9_static_partition,
-                            fig10_breakdown, gpu_regime, prefix_cache_sweep,
-                            roofline_table, table2_sensitivity,
-                            table3_cluster)
+                            fig10_breakdown, gpu_regime, kernel_micro,
+                            prefix_cache_sweep, roofline_table,
+                            table2_sensitivity, table3_cluster)
     suites = [
+        ("kernel_micro", kernel_micro),
         ("gpu_regime", gpu_regime),
         ("fig1", fig1_saturation),
         ("fig2", fig2_agg_vs_disagg),

@@ -200,7 +200,7 @@ def _tree_write(tree, sub, idx):
 def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
                       finish: bool = False, sample: bool = False,
                       temperature: float = 0.0, donate: bool = True,
-                      ctx=None):
+                      duet_kernel: bool = False, ctx=None):
     """Build one fused duet super-iteration program.
 
     Static bucket parameters (each combination compiles once — the engine's
@@ -239,6 +239,9 @@ def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
     """
     if kb == 0 and chunk == 0:
         raise ValueError("empty super-iteration")
+    if duet_kernel and (not paged or kb == 0 or chunk == 0):
+        raise ValueError("duet_kernel needs paged mode with both phases "
+                         "(kb > 0 and chunk > 0)")
 
     def _decode(params, kvstate, last_tok, pos, tables, dkey, active):
         if paged:
@@ -286,7 +289,65 @@ def make_superiter_fn(model: Model, kb: int, *, paged: bool, chunk: int = 0,
                 sampled = tok
         return sampled, last_tok, pos, kvstate
 
-    if paged:
+    if duet_kernel:
+        # Algorithm-1 fused grid: decode step 1 and the whole prefill chunk
+        # execute as ONE duet_attention_paged launch per layer (decode rows
+        # + chunk rows, interleaved by the `order` tile permutation); the
+        # remaining kb-1 look-ahead steps run as the usual fused scan.
+        # Same signature as the paged program plus the trailing `order`
+        # (B+chunk,) input, so the async engine's one-device_get contract
+        # and donation layout are unchanged.
+        def fused(params, pools, state, last_tok, pos, tables, key, active,
+                  pre_toks, pre_tbl, pre_start, pre_slot, override_tok,
+                  order):
+            B = last_tok.shape[0]
+            key, dkey = jax.random.split(key)
+            k_first, k_rest = jax.random.split(dkey)
+            row_tok = jnp.concatenate([last_tok[:, 0], pre_toks[0]])[:, None]
+            row_pos = jnp.concatenate(
+                [pos, pre_start + jnp.arange(chunk, dtype=pos.dtype)])
+            W, Wp = tables.shape[1], pre_tbl.shape[1]
+            Wm = max(W, Wp)
+            row_tbl = jnp.concatenate([
+                jnp.pad(tables, ((0, 0), (0, Wm - W))),
+                jnp.repeat(jnp.pad(pre_tbl, ((0, 0), (0, Wm - Wp))),
+                           chunk, axis=0)])
+            logits, pools, state = model.duet_step_paged(
+                params, pools, state, row_tok, row_pos, row_tbl, order)
+            # decode step 1 retires inside the duet grid
+            nxt = _sample(logits[:B], k_first, temperature)[:, None]
+            nxt = jnp.where(active[:, None], nxt, last_tok)
+            pos = jnp.where(active, pos + 1, pos)
+            toks = nxt
+            if kb > 1:
+                rest, pools, state, pos = lookahead_decode_paged(
+                    model, params, pools, state, nxt, pos, tables, kb - 1,
+                    key=k_rest, temperature=temperature, active_mask=active)
+                toks = jnp.concatenate([nxt, rest], axis=1)
+            last_tok = jnp.where(active[:, None], toks[:, -1:], last_tok)
+            # the chunk's last row carries the prefill logits
+            sampled = jnp.int32(-1)
+            if finish:
+                tok = (jnp.argmax(logits[B + chunk - 1]).astype(jnp.int32)
+                       if sample else override_tok)
+                last_tok = jax.lax.dynamic_update_slice(
+                    last_tok, tok[None, None], (pre_slot, 0))
+                pos = jax.lax.dynamic_update_slice(
+                    pos, (pre_start + chunk)[None].astype(pos.dtype),
+                    (pre_slot,))
+                if sample:
+                    sampled = tok
+            return toks, sampled, last_tok, pos, pools, state, key
+
+        donate_argnums = (1, 2, 3, 4) if donate else ()
+        if ctx is not None:
+            rep = ctx.replicated
+            pool_sh = ctx.pool_shardings()
+            return jax.jit(
+                fused, donate_argnums=donate_argnums,
+                in_shardings=(ctx.param_shardings(), pool_sh) + (rep,) * 12,
+                out_shardings=(rep, rep, rep, rep, pool_sh, rep, rep))
+    elif paged:
         def fused(params, pools, state, last_tok, pos, tables, key, active,
                   pre_toks, pre_tbl, pre_start, pre_slot, override_tok):
             key, dkey = jax.random.split(key)

@@ -119,7 +119,8 @@ class RooflineModel:
                  tp: int = 1, dtype_bytes: int = 2,
                  mla_absorb: bool = False,
                  sliding_window: Optional[int] = None,
-                 page_size: int = 1, mesh=None):
+                 page_size: int = 1, mesh=None,
+                 kernel_path: Optional[str] = None):
         self.cfg = cfg
         self.hw = hw
         # ``mesh``: the jax.sharding.Mesh the engine actually executes on.
@@ -142,6 +143,13 @@ class RooflineModel:
         # KV read traffic rounds the context up to a page multiple.
         # page_size=1 models contiguous (slab) KV exactly as before.
         self.page_size = max(1, page_size)
+        # How attention executes. The jnp paged path gathers pages into a
+        # dense slab before attending, so each cached byte moves ~3x (pool
+        # read, slab write, slab read); the Pallas kernels stream each page
+        # once. None prices like the kernels so existing virtual-clock
+        # pins are unchanged.
+        self.kernel_path = kernel_path
+        self.kv_read_factor = 3.0 if kernel_path == "jnp" else 1.0
 
     def _page_pad(self, ctx: np.ndarray) -> np.ndarray:
         if self.page_size == 1:
@@ -223,7 +231,8 @@ class RooflineModel:
             if self.sliding_window is not None:
                 ctx = np.minimum(ctx, self.sliding_window + q)
             F = 4.0 * H * q * ctx * dh + 2.0 * H * q * ctx
-            B = 2.0 * H * q * dh * b + 2.0 * G * self._page_pad(ctx) * dh * b
+            B = (2.0 * H * q * dh * b
+                 + self.kv_read_factor * 2.0 * G * self._page_pad(ctx) * dh * b)
             return F, B
         if kind in MLA_KINDS:
             H = cfg.num_heads
@@ -329,6 +338,24 @@ class RooflineModel:
                        units: Optional[float] = None) -> float:
         reqs = [RequestLoad(q=1, c=context) for _ in range(batch)]
         return self.iteration_latency(reqs, units)
+
+    def split_kv_threshold(self) -> int:
+        """Context length (tokens) above which the flash-decoding split-KV
+        kernel pays for its combine epilogue: the point where one request's
+        per-layer KV read traffic reaches the layer's attention weight
+        traffic, so the sequential page-chain walk — not weight streaming —
+        bounds the decode grid and splitting the chain recovers parallelism.
+        Rounded up to a page multiple; 0 if the pattern has no GQA blocks."""
+        cfg, b = self.cfg, self.b
+        if not any(k in GQA_KINDS for k in cfg.block_pattern):
+            return 0
+        D, dh = cfg.d_model, cfg.head_dim
+        H, G = cfg.num_heads, cfg.num_kv_heads
+        weight_bytes = (D * (H + 2 * G) * dh + H * dh * D) * b
+        kv_bytes_per_token = 2.0 * G * dh * b
+        ctx = weight_bytes / kv_bytes_per_token
+        ps = self.page_size
+        return int(-(-ctx // ps) * ps)
 
     def model_flops_per_token(self) -> float:
         """6·N_active·(approx) — used for the roofline 'useful FLOPs' ratio."""

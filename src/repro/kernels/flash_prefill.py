@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.ops import (DENOM_EPS, NEG_INF, default_sm_scale,
+                               gqa_split_heads)
 
 
 def _kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -70,7 +71,7 @@ def _kernel(q_off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == pl.num_programs(3) - 1)
     def _finish():
-        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        denom = jnp.maximum(l_ref[...], DENOM_EPS)[..., None]
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
@@ -87,13 +88,13 @@ def flash_prefill(q, k, v, *, q_offset=0, kv_len=None, block_q: int = 128,
     assert H % G == 0 and Sq % block_q == 0 and Sk % block_k == 0
     rep = H // G
     # layout: group queries by kv head -> (B, G, Sq, rep, Dh)
-    qg = q.reshape(B, Sq, G, rep, Dh).transpose(0, 2, 1, 3, 4)
+    qg = gqa_split_heads(q, G).transpose(0, 2, 1, 3, 4)
     kg = k.transpose(0, 2, 1, 3)     # (B, G, Sk, Dh)
     vg = v.transpose(0, 2, 1, 3)
 
     grid = (B, G, Sq // block_q, Sk // block_k)
     kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
-                               rep=rep, sm_scale=1.0 / (Dh ** 0.5),
+                               rep=rep, sm_scale=default_sm_scale(Dh),
                                kv_len=kv_len if kv_len is not None else Sk)
     out = pl.pallas_call(
         kernel,

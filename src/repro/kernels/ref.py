@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.kernels.ops import (NEG_INF, default_sm_scale, gqa_repeat_kv)
 
 
 def _gqa_probs(scores, mask):
@@ -25,11 +25,11 @@ def flash_prefill_ref(q, k, v, *, q_offset: int = 0):
     B, Sq, H, Dh = q.shape
     G = k.shape[2]
     rep = H // G
-    kr = jnp.repeat(k, rep, axis=2)
-    vr = jnp.repeat(v, rep, axis=2)
+    kr = gqa_repeat_kv(k, rep)
+    vr = gqa_repeat_kv(v, rep)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
                         preferred_element_type=jnp.float32)
-    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    scores = scores * default_sm_scale(Dh)
     qpos = jnp.arange(Sq) + q_offset
     kpos = jnp.arange(k.shape[1])
     mask = kpos[None, :] <= qpos[:, None]
@@ -47,11 +47,11 @@ def paged_decode_ref(q, k_pages, v_pages, tables, lengths):
     rep = H // G
     k = k_pages[tables].reshape(B, P * ps, G, Dh)       # (B, L, G, Dh)
     v = v_pages[tables].reshape(B, P * ps, G, Dh)
-    kr = jnp.repeat(k, rep, axis=2)
-    vr = jnp.repeat(v, rep, axis=2)
+    kr = gqa_repeat_kv(k, rep)
+    vr = gqa_repeat_kv(v, rep)
     scores = jnp.einsum("bhd,bkhd->bhk", q, kr,
                         preferred_element_type=jnp.float32)
-    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    scores = scores * default_sm_scale(Dh)
     mask = jnp.arange(P * ps)[None, :] < lengths[:, None]
     probs = _gqa_probs(scores, mask[:, None, :])
     out = jnp.einsum("bhk,bkhd->bhd", probs, vr.astype(jnp.float32))
@@ -71,14 +71,25 @@ def duet_attention_ref(q, row_slot, row_pos, k_slab, v_slab):
     Ns, S, G, _ = k_slab.shape
     rep = H // G
     slot = jnp.maximum(row_slot, 0)
-    k = jnp.repeat(k_slab[slot], rep, axis=2)           # (R,S,H,Dh)
-    v = jnp.repeat(v_slab[slot], rep, axis=2)
+    k = gqa_repeat_kv(k_slab[slot], rep)                # (R,S,H,Dh)
+    v = gqa_repeat_kv(v_slab[slot], rep)
     scores = jnp.einsum("rhd,rkhd->rhk", q, k,
                         preferred_element_type=jnp.float32)
-    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    scores = scores * default_sm_scale(Dh)
     mask = (jnp.arange(S)[None, :] <= row_pos[:, None]) \
         & (row_slot >= 0)[:, None]
     probs = _gqa_probs(scores, mask[:, None, :])
     probs = jnp.where((row_slot >= 0)[:, None, None], probs, 0.0)
     out = jnp.einsum("rhk,rkhd->rhd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def duet_attention_paged_ref(q, row_slot, row_pos, k_pages, v_pages, tables):
+    """Paged-pool variant of :func:`duet_attention_ref`: gather each row's
+    page chain into a dense slab (flat index == absolute position, the
+    engines' dense-fill invariant), then reuse the slab oracle."""
+    N, ps, G, Dh = k_pages.shape
+    B, P = tables.shape
+    k_slab = k_pages[tables].reshape(B, P * ps, G, Dh)
+    v_slab = v_pages[tables].reshape(B, P * ps, G, Dh)
+    return duet_attention_ref(q, row_slot, row_pos, k_slab, v_slab)

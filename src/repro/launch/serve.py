@@ -81,7 +81,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="device page-pool size in tokens "
                          "(default: max_slots * max_len)")
     ap.add_argument("--attn-kernel", action="store_true",
-                    help="route decode attention through the Pallas kernels")
+                    help="route decode attention through the Pallas kernels; "
+                         "the engine probes the geometry and reports the "
+                         "resolved path as kernel_path (pallas, "
+                         "pallas_sharded under --tp > 1, or jnp fallback). "
+                         "With --no-clamp an unusable kernel request is an "
+                         "error instead of a warn-and-fallback")
+    ap.add_argument("--split-kv-threshold", type=int, default=None,
+                    help="block-table capacity (tokens) above which the "
+                         "kernel path decodes with the flash-decoding "
+                         "split-KV kernel (default: priced from the "
+                         "roofline; 0 disables splitting)")
     ap.add_argument("--temperature", type=float, default=0.0)
     # mesh-aware serving: shard params + KV page pools over a device mesh.
     # tp=1, dp=1 (default) is the degenerate 1-device mesh — same code
@@ -240,7 +250,12 @@ def main(argv=None):
         host_kv_tokens=args.host_kv_tokens,
         kv_quant=args.kv_quant,
         temperature=args.temperature,
+        split_kv_threshold=args.split_kv_threshold,
+        strict_kernel=args.attn_kernel and not args.clamp,
         tp=args.tp, units=max(1, args.tp))
+    if args.split_kv_threshold is not None and not args.attn_kernel:
+        _warn("--split-kv-threshold only applies with --attn-kernel; "
+              "ignored on the jnp attention path")
 
     def print_event(ev):
         if isinstance(ev, TokenEvent):
@@ -272,6 +287,7 @@ def main(argv=None):
         if args.stream:
             print(json.dumps({
                 "event": "mesh", **router.ctx.describe(),
+                "kernel_path": router.engines[0].kernel_path,
                 "collectives_per_iteration":
                     router.ctx.collectives_per_iteration()}))
             if args.paged:
@@ -283,6 +299,7 @@ def main(argv=None):
             out["dispatch_stats"] = [dataclasses.asdict(e.dstats)
                                      for e in router.engines]
         out["mesh"] = router.ctx.describe()
+        out["kernel_path"] = router.engines[0].kernel_path
         out["collectives_per_iteration"] = \
             router.ctx.collectives_per_iteration()
         if args.paged:
@@ -305,6 +322,7 @@ def main(argv=None):
         # JSONL stream next to the prefix_cache outcome
         print(json.dumps({
             "event": "mesh", **engine.ctx.describe(),
+            "kernel_path": engine.kernel_path,
             "collectives_per_iteration":
                 engine.ctx.collectives_per_iteration()}))
         if args.paged:
@@ -323,6 +341,7 @@ def main(argv=None):
     out["duet_fraction"] = engine.mux.stats.duet_fraction
     out["iterations"] = engine.mux.stats.iterations
     out["mesh"] = engine.ctx.describe()
+    out["kernel_path"] = engine.kernel_path
     out["collectives_per_iteration"] = \
         engine.ctx.collectives_per_iteration()
     if args.paged:

@@ -327,14 +327,19 @@ def _paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
 def gqa_decode_paged(params: dict, cfg: ArchConfig, x: jax.Array,
                      k_pages: jax.Array, v_pages: jax.Array,
                      table: jax.Array, pos: jax.Array, *,
-                     use_kernel: bool = False, interpret: bool = True):
+                     use_kernel: bool = False, kernel_mesh=None,
+                     split_kv_threshold: int = 0, interpret=None):
     """One-token decode against the paged KV pool.
 
     x (B,1,D); table (B,P) int32 page ids; pos (B,) absolute write position.
     The page covering ``pos`` must already be allocated — the engine's
     look-ahead reservation (§4.3, DESIGN.md §3) guarantees it for all k
     fused steps, so ``table`` is constant inside the fused decode program.
-    ``use_kernel`` routes the read through the Pallas paged_decode kernel.
+    ``use_kernel`` routes the read through the Pallas kernel dispatcher
+    (``ops.paged_decode_auto``): ``kernel_mesh`` selects the shard_map
+    wrapper over the KV-head mesh axis under TP>1, ``split_kv_threshold``
+    (tokens of table capacity) the flash-decoding split-KV variant, and
+    ``interpret=None`` resolves to interpret mode off-TPU.
     """
     q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
     k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
@@ -346,9 +351,11 @@ def gqa_decode_paged(params: dict, cfg: ArchConfig, x: jax.Array,
     v_pages = _paged_write(v_pages, v, table, pos[:, None])
     lengths = pos + 1
     if use_kernel:
-        from repro.kernels.paged_decode import paged_decode as _pd
-        rows = _pd(q[:, 0], k_pages.astype(q.dtype), v_pages.astype(q.dtype),
-                   table, lengths, interpret=interpret)
+        from repro.kernels import ops as kernel_ops
+        rows = kernel_ops.paged_decode_auto(
+            q[:, 0], k_pages.astype(q.dtype), v_pages.astype(q.dtype),
+            table, lengths, mesh=kernel_mesh,
+            split_threshold=split_kv_threshold, interpret=interpret)
     else:
         kg = _paged_gather(k_pages, table).astype(q.dtype)
         vg = _paged_gather(v_pages, table).astype(q.dtype)
@@ -395,15 +402,50 @@ def gqa_prefill_paged(params: dict, cfg: ArchConfig, x: jax.Array,
     return out, (k_pages, v_pages)
 
 
+def gqa_duet_paged(params: dict, cfg: ArchConfig, x: jax.Array,
+                   k_pages: jax.Array, v_pages: jax.Array,
+                   table: jax.Array, pos: jax.Array, order: jax.Array, *,
+                   interpret=None):
+    """Mixed-phase duet step over the paged pool (Algorithm 1 on-device).
+
+    ``x`` (R,1,D) holds R combined rows — decode rows (one token each, own
+    table row) followed by the prefill chunk's rows (successive positions,
+    shared table row). All rows' K/V scatter into their pages first, then
+    every row attends causally over its chain (``k_pos <= pos``), so chunk
+    row i sees rows 0..i — chunked prefill and the decode steps execute as
+    ONE ``duet_attention_paged`` grid. ``order`` (R,) int32 is the
+    Algorithm-1 tile permutation from ``ops.build_duet_schedule``
+    (block_q=1): tile t processes row ``order[t]``, which interleaves
+    decode tiles ahead of prefill tiles; numerics are order-invariant.
+    """
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["w_k"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["w_v"])
+    q, k = _qk_norm(q, k, params, cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    k_pages = _paged_write(k_pages, k, table, pos[:, None])
+    v_pages = _paged_write(v_pages, v, table, pos[:, None])
+    from repro.kernels import ops as kernel_ops
+    order = order.astype(jnp.int32)
+    rows = kernel_ops.duet_attention_paged(
+        q[:, 0][order], pos[order][:, None].astype(jnp.int32), order,
+        k_pages.astype(q.dtype), v_pages.astype(q.dtype), table,
+        block_q=1, interpret=interpret)
+    rows = jnp.zeros_like(rows).at[order].set(rows)      # undo the permute
+    out = jnp.einsum("bhe,hed->bd", rows, params["w_o"])[:, None, :]
+    return out, (k_pages, v_pages)
+
+
 def gqa_decode_kernel(params: dict, cfg: ArchConfig, x: jax.Array,
                       cache: AttnCache, pos: jax.Array, *,
-                      block_k: int = 128, interpret: bool = True):
+                      block_k: int = 128, interpret=None):
     """Decode attention routed through the fused duet-attention Pallas
     kernel (kernels/duet_attention.py): each active request is one decode
     row over the slab — the engine's kernel-backend path. Semantically
     identical to gqa_decode (full cache, no sliding); tests assert it.
     """
-    from repro.kernels.duet_attention import duet_attention as _kernel
+    from repro.kernels.ops import duet_attention as _kernel
     B = x.shape[0]
     W = cache.k.shape[1]
     q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])

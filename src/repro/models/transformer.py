@@ -48,13 +48,20 @@ ATTN_KINDS = GQA_KINDS
 
 class Model:
     def __init__(self, cfg: ArchConfig, *, mla_absorb: bool = False,
-                 remat: bool = False, attn_kernel: bool = False):
+                 remat: bool = False, attn_kernel: bool = False,
+                 kernel_mesh=None, split_kv_threshold: int = 0):
         self.cfg = cfg
         self.mla_absorb = mla_absorb
         self.remat = remat  # checkpoint each block in the training forward
         # route decode attention through the fused duet Pallas kernel
         # (interpret mode off-TPU); jnp path is the default oracle
         self.attn_kernel = attn_kernel
+        # kernel-path statics, resolved by the engine's capability probe:
+        # a Mesh routes paged_decode through shard_map over the KV-head
+        # axis (TP>1); a positive threshold (tokens of table capacity)
+        # selects the split-KV flash-decoding variant above it
+        self.kernel_mesh = kernel_mesh
+        self.split_kv_threshold = split_kv_threshold
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
@@ -284,7 +291,9 @@ class Model:
                 h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
                 out, pool = attn_mod.gqa_decode_paged(
                     p["attn"], cfg, h, *pools[i], tables, pos,
-                    use_kernel=self.attn_kernel)
+                    use_kernel=self.attn_kernel,
+                    kernel_mesh=self.kernel_mesh,
+                    split_kv_threshold=self.split_kv_threshold)
                 x = self._mlp_block(p, kind, x + out)
                 new_pools.append(pool)
                 new_state.append(None)
@@ -319,6 +328,40 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._logits(params, x)
         return logits[:, 0], new_pools, new_state
+
+    def duet_step_paged(self, params, pools, state, token, pos, tables,
+                        order):
+        """One fused mixed-phase duet step against paged attention KV.
+
+        ``token`` (R,1) combined rows — decode rows first (one per engine
+        slot, each with its own ``tables`` row), then one prefill chunk's
+        rows (successive positions, all sharing the chunk's table row).
+        ``pos`` (R,) absolute positions; ``tables`` (R,P); ``order`` (R,)
+        the Algorithm-1 tile permutation (``ops.build_duet_schedule``).
+        Every layer executes both phases in one ``duet_attention_paged``
+        grid. Requires an all-GQA block pattern (the engine's capability
+        probe gates dispatch). Returns (logits (R,V), pools, state).
+        """
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            raise NotImplementedError("paged serving covers text frontends")
+        x = jnp.take(params["embedding"], token, axis=0)
+        new_pools = []
+        for i in range(cfg.num_layers):
+            p, _ = self._block_params(params, i)
+            kind = cfg.block_pattern[i]
+            if kind not in ATTN_KINDS:
+                raise ValueError(
+                    f"duet kernel path requires GQA attention blocks, "
+                    f"got {kind!r}")
+            h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+            out, pool = attn_mod.gqa_duet_paged(
+                p["attn"], cfg, h, *pools[i], tables, pos, order)
+            x = self._mlp_block(p, kind, x + out)
+            new_pools.append(pool)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_pools, state
 
     def decode_step(self, params, cache, token, pos, *, sliding=False):
         """One decode step. token (B,1) (audio: (B,K,1)); pos (B,) int32.

@@ -47,9 +47,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import GQA_KINDS
 from repro.core.device import DeviceContext
 from repro.core.lookahead import make_superiter_fn
 from repro.core.roofline import HardwareSpec, TPU_V5E
+from repro.kernels import build_duet_schedule
 from repro.models.transformer import Model
 from repro.serving.engine import DuetEngine, EngineConfig
 from repro.serving.request import Phase, Request, ServingMetrics
@@ -150,6 +152,17 @@ class AsyncDuetEngine(DuetEngine):
         # donation rebinds cache/pool buffers in place; the CPU backend does
         # not implement it and would warn on every dispatch
         self._donate = jax.default_backend() != "cpu"
+        # paged duet kernel: when the engine resolved the single-device
+        # Pallas path and every block is GQA attention, the decode batch and
+        # the prefill chunk fuse into ONE duet_attention_paged grid per
+        # layer (paper Algorithm 1 mapped to the TPU grid). The tile
+        # permutation depends only on (max_slots, chunk), so it is cached
+        # per chunk bucket and rides the dispatch as a device input.
+        self._duet_kernel = (
+            self.kernel_path == "pallas" and self.paged
+            and all(k in GQA_KINDS for k in self.cfg.block_pattern))
+        self._duet_orders: dict = {}
+        self._duet_safe = True
         self._programs: dict = {}
         self.dstats = DispatchStats()
         # _pending/_all/_epoch bookkeeping lives in the base engine; the
@@ -336,6 +349,13 @@ class AsyncDuetEngine(DuetEngine):
         kb, ran = (self._plan_decode_batch(plan.decode, k)
                    if plan.decode else (0, []))
         self._privatize_decode_pages(ran)
+        # duet fusion safety: a decode request finishing inside this
+        # iteration returns its pages to the pool below, and the prefill
+        # chunk may reallocate them. The sequential program orders decode
+        # reads before the chunk's writes; the fused duet grid does not —
+        # so those iterations dispatch the sequential program instead.
+        self._duet_safe = not any(
+            r.output_len - r.generated <= kb for r in ran)
         dec_items = [_DecItem(r, r.slot) for r in ran]
         for r in ran:
             self.kv_mgr.commit_tokens(r.rid, kb)
@@ -422,7 +442,7 @@ class AsyncDuetEngine(DuetEngine):
         self.now += self._iteration_span(plan, kb, t_d, t_p)
 
     # ---------------------------------------------------------------- device
-    def _program(self, key, kb, chunk, finish, sample):
+    def _program(self, key, kb, chunk, finish, sample, duet=False):
         prog = self._programs.get(key)
         if prog is None:
             self.dstats.cache_misses += 1
@@ -430,11 +450,26 @@ class AsyncDuetEngine(DuetEngine):
                 self.model, kb, paged=self.paged, chunk=chunk,
                 finish=finish, sample=sample,
                 temperature=self.ec.temperature, donate=self._donate,
-                ctx=self.ctx)
+                duet_kernel=duet, ctx=self.ctx)
             self._programs[key] = prog
         else:
             self.dstats.cache_hits += 1
         return prog
+
+    def _duet_order(self, chunk: int) -> np.ndarray:
+        """Tile permutation for the fused duet grid: decode rows 0..B-1
+        interleaved among chunk rows B..B+chunk-1 at the Algorithm-1 ratio
+        (block_q=1: one row per tile, so ``row_src`` IS the permutation).
+        Scheduling-only — the kernel's online softmax is order-invariant."""
+        order = self._duet_orders.get(chunk)
+        if order is None:
+            B = self.ec.max_slots
+            sched = build_duet_schedule(
+                [(b, 0) for b in range(B)],
+                [(B, i) for i in range(chunk)], block_q=1)
+            order = sched.row_src.astype(np.int32)
+            self._duet_orders[chunk] = order
+        return order
 
     def _dispatch(self, inf: _Inflight, kb: int, dec_args, pre_item,
                   t_p: float):
@@ -473,17 +508,21 @@ class AsyncDuetEngine(DuetEngine):
             pre_slot = jnp.int32(0)
             override = jnp.int32(0)
 
+        duet = (self._duet_kernel and self._duet_safe
+                and kb > 0 and chunk > 0)
         key = (self.paged, kb, width if kb else 0, chunk,
-               pwidth if chunk else 0, finish, sample)
-        prog = self._program(key, kb, chunk, finish, sample)
+               pwidth if chunk else 0, finish, sample, duet)
+        prog = self._program(key, kb, chunk, finish, sample, duet)
         self.dstats.dispatches += 1
         if self.paged:
+            pargs = (self.params, self.pools, self.cache, self.d_last_tok,
+                     self.d_pos, jnp.asarray(tbl), self.d_key,
+                     jnp.asarray(active), pre_toks, pre_tbl, pre_start,
+                     pre_slot, override)
+            if duet:
+                pargs += (jnp.asarray(self._duet_order(chunk)),)
             (toks, sampled, self.d_last_tok, self.d_pos, self.pools,
-             self.cache, self.d_key) = prog(
-                self.params, self.pools, self.cache, self.d_last_tok,
-                self.d_pos, jnp.asarray(tbl), self.d_key,
-                jnp.asarray(active), pre_toks, pre_tbl, pre_start,
-                pre_slot, override)
+             self.cache, self.d_key) = prog(*pargs)
         else:
             (toks, sampled, self.d_last_tok, self.d_pos, self.cache,
              self.d_key) = prog(

@@ -43,11 +43,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import GQA_KINDS, ArchConfig
 from repro.core.device import DeviceContext
 from repro.core.lookahead import make_lookahead_fn, make_paged_lookahead_fn
 from repro.core.multiplexer import AdaptiveMultiplexer
-from repro.core.roofline import HardwareSpec, TPU_V5E
+from repro.core.roofline import HardwareSpec, RooflineModel, TPU_V5E
 from repro.models.transformer import Model
 from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, HostPoolConfig,
                                    PagedKVCacheManager, PagePoolConfig,
@@ -95,6 +95,17 @@ class EngineConfig:
     # tier (eviction-only baseline). Requires paged + prefix_cache.
     host_kv_tokens: int = 0
     kv_quant: str = "none"
+    # Pallas kernel path (Model.attn_kernel engines). The capability probe
+    # resolves the executed path into ``DuetEngine.kernel_path`` (one of
+    # KERNEL_PATHS); ``strict_kernel`` turns an unusable kernel request
+    # into an error instead of a warn-and-fallback (--no-clamp semantics).
+    # ``split_kv_threshold``: table capacity in tokens above which decode
+    # uses the flash-decoding split-KV kernel — None prices the threshold
+    # from the roofline, 0 disables splitting.
+    split_kv_threshold: Optional[int] = None
+    strict_kernel: bool = False
+
+    KERNEL_PATHS = ("jnp", "pallas", "pallas_sharded")
 
 
 class DuetEngine:
@@ -119,15 +130,45 @@ class DuetEngine:
         # tp for planning: the executed mesh wins; EngineConfig.tp remains
         # the modeling-only knob for single-device what-if runs
         self._tp = self.ctx.tp if self.ctx.tp > 1 else engine_cfg.tp
-        if self.ctx.tp > 1 and model.attn_kernel:
-            warnings.warn(
-                "attn_kernel disabled under TP>1: the Pallas paged-decode "
-                "kernel is not partition-aware yet; using the sharded jnp "
-                "attention path")
-            # per-engine override: other engines may share this Model
-            model = copy.copy(model)
-            model.attn_kernel = False
-            self.model = model
+        # capability probe: resolve the attention path this engine will
+        # actually execute and pin it on a per-engine Model copy (other
+        # engines may share the Model). ``kernel_path`` is the explicit
+        # report — surfaced by serve.py in summaries and the JSONL mesh
+        # event — replacing the old blanket warn-and-fallback.
+        model = copy.copy(model)
+        self.kernel_path = "jnp"
+        if model.attn_kernel:
+            if self.ctx.tp == 1:
+                self.kernel_path = "pallas"
+            elif self.paged and self.ctx.rules().get("kv_heads") == "model":
+                # per-shard grids read their local page-pool shard; block
+                # tables stay host-global (replicated)
+                self.kernel_path = "pallas_sharded"
+                model.kernel_mesh = self.ctx.mesh
+            else:
+                reason = (
+                    "non-paged serving has no sharded slab kernel"
+                    if not self.paged else
+                    f"kv heads ({self.cfg.num_kv_heads}) do not shard over "
+                    f"the model axis ({self.ctx.tp})")
+                msg = (f"attn_kernel unusable under this geometry ({reason});"
+                       " falling back to the sharded jnp attention path")
+                if engine_cfg.strict_kernel:
+                    raise ValueError(msg)
+                warnings.warn(msg)
+                model.attn_kernel = False
+            if self.kernel_path != "jnp" and self.paged:
+                thr = engine_cfg.split_kv_threshold
+                if thr is None:  # roofline-priced default; 0 disables
+                    thr = RooflineModel(
+                        self.cfg, hw, tp=self._tp,
+                        page_size=engine_cfg.page_size).split_kv_threshold()
+                model.split_kv_threshold = int(thr)
+        elif engine_cfg.strict_kernel:
+            raise ValueError(
+                "strict_kernel requires a Model built with attn_kernel=True")
+        assert self.kernel_path in EngineConfig.KERNEL_PATHS
+        self.model = model
         self.params = self.ctx.place_params(params)
 
         # prefix caching skips the matched prefix's prefill entirely, which

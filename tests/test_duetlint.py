@@ -457,6 +457,53 @@ PALLAS_TN = """
 """
 
 
+PALLAS_ARITY_TP = """
+    from jax.experimental import pallas as pl
+
+    def build(f, grid):                       # grid unresolvable: a param
+        return pl.pallas_call(
+            f,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+                pl.BlockSpec((8, 128), lambda i, j, k: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((8, 128), lambda i, j, k: (i, j)),
+        )
+"""
+
+PALLAS_DIV_TP = """
+    from jax.experimental import pallas as pl
+    import jax.numpy as jnp
+
+    def kernel(acc_ref, l_ref, o_ref):
+        j = pl.program_id(0)
+
+        @pl.when(j == 7)
+        def _epilogue():
+            o_ref[0] = acc_ref[...] / l_ref[...]      # 0-denominator NaNs
+
+        pl.when(j == 8)(lambda: pl.store(
+            o_ref, (0,), acc_ref[...] / pl.load(l_ref, (0,), mask=None),
+            mask=None))
+"""
+
+PALLAS_DIV_TN = """
+    from jax.experimental import pallas as pl
+    import jax.numpy as jnp
+
+    DENOM_EPS = 1e-20
+
+    def kernel(acc_ref, l_ref, o_ref):
+        j = pl.program_id(0)
+
+        @pl.when(j == 7)
+        def _epilogue():
+            denom = jnp.maximum(l_ref[...], DENOM_EPS)[..., None]
+            o_ref[0] = acc_ref[...] / denom
+"""
+
+
 def test_pallas_hygiene_true_positive(tmp_path):
     report = lint(tmp_path, {"kernels/broken.py": PALLAS_TP},
                   rules=["pallas-hygiene"])
@@ -468,6 +515,28 @@ def test_pallas_hygiene_true_positive(tmp_path):
 
 def test_pallas_hygiene_true_negative(tmp_path):
     report = lint(tmp_path, {"kernels/ok.py": PALLAS_TN},
+                  rules=["pallas-hygiene"])
+    assert report.findings == []
+
+
+def test_pallas_hygiene_arity_consistency(tmp_path):
+    report = lint(tmp_path, {"kernels/mixed.py": PALLAS_ARITY_TP},
+                  rules=["pallas-hygiene"])
+    msgs = messages(report)
+    assert sum("other index maps in the same pallas_call" in m
+               for m in msgs) == 1
+    assert any("takes 2 args" in m and "take 3" in m for m in msgs)
+
+
+def test_pallas_hygiene_epilogue_division(tmp_path):
+    report = lint(tmp_path, {"kernels/div.py": PALLAS_DIV_TP},
+                  rules=["pallas-hygiene"])
+    msgs = messages(report)
+    assert sum("division by a raw ref read" in m for m in msgs) == 2
+
+
+def test_pallas_hygiene_guarded_division_clean(tmp_path):
+    report = lint(tmp_path, {"kernels/ok_div.py": PALLAS_DIV_TN},
                   rules=["pallas-hygiene"])
     assert report.findings == []
 

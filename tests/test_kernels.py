@@ -7,11 +7,12 @@ import pytest
 
 from repro.kernels import (build_duet_schedule, pack_duet_queries,
                            unpack_duet_output)
-from repro.kernels.duet_attention import duet_attention
+from repro.kernels.duet_attention import duet_attention, duet_attention_paged
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.paged_decode import paged_decode
-from repro.kernels.ref import (duet_attention_ref, flash_prefill_ref,
-                               paged_decode_ref)
+from repro.kernels.ops import num_splits_for
+from repro.kernels.paged_decode import paged_decode, paged_decode_splitkv
+from repro.kernels.ref import (duet_attention_paged_ref, duet_attention_ref,
+                               flash_prefill_ref, paged_decode_ref)
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -54,6 +55,140 @@ def test_paged_decode_sweep(B, H, G, Dh, N, ps, P, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,G,Dh,N,ps,P,S,lens", [
+    (2, 4, 2, 64, 16, 16, 4, 2, None),       # even page split
+    (2, 4, 2, 64, 16, 16, 5, 2, None),       # odd page count -> padded split
+    (3, 8, 1, 128, 32, 16, 6, 3, None),      # MQA, rep = H
+    (2, 8, 2, 64, 16, 8, 6, 4, None),        # GQA rep > 1
+    (2, 4, 2, 64, 16, 8, 1, 4, None),        # single-page chain (S clamps)
+    (2, 4, 2, 64, 16, 8, 4, 2, (16, 32)),    # length exactly at split edge
+    (2, 4, 2, 64, 16, 8, 4, 4, (1, 31)),     # odd lengths, dead splits
+])
+def test_paged_decode_splitkv_sweep(B, H, G, Dh, N, ps, P, S, lens, dtype):
+    """Flash-decoding split-KV variant vs the jnp oracle: the per-split
+    (m, l, acc) partials must survive dead splits (length entirely inside an
+    earlier split), page-pad, and the log-sum-exp combine epilogue."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    rng = np.random.default_rng(1)
+    q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+    kp = jax.random.normal(ks[1], (N, ps, G, Dh), dtype)
+    vp = jax.random.normal(ks[2], (N, ps, G, Dh), dtype)
+    tables = jnp.asarray(rng.integers(1, N, (B, P)), jnp.int32)
+    if lens is None:
+        lens = rng.integers(1, P * ps + 1, (B,))
+    lengths = jnp.asarray(lens, jnp.int32)
+    out = paged_decode_splitkv(q, kp, vp, tables, lengths, num_splits=S,
+                               interpret=True)
+    ref = paged_decode_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_num_splits_for_thresholds():
+    """The auto-dispatch split count: off below/at the threshold, ceil of
+    capacity/threshold above it, clamped to the page count and the scratch
+    cap, disabled for threshold 0/None."""
+    assert num_splits_for(6, 8, 0) == 1
+    assert num_splits_for(6, 8, None) == 1
+    assert num_splits_for(6, 8, 48) == 1          # capacity == threshold
+    assert num_splits_for(6, 8, 16) == 3          # ceil(48/16)
+    assert num_splits_for(6, 8, 100) == 1
+    assert num_splits_for(2, 8, 1) == 2           # clamped to page count
+    assert num_splits_for(64, 8, 1) == 8          # scratch cap
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bq", [1, 4])
+def test_duet_attention_paged_mixed_phases(bq, dtype):
+    """Paged duet kernel vs the gathered-slab oracle: scalar-prefetched
+    tile descriptors resolve (slot -> block-table -> page) for interleaved
+    decode and prefill tiles, including tile pad rows (bq > 1) and the
+    engine's one-row-per-tile layout (bq = 1)."""
+    N, ps, G, H, Dh, P = 24, 16, 2, 4, 64, 8
+    rng = np.random.default_rng(3)
+    kp = jax.random.normal(jax.random.PRNGKey(0), (N, ps, G, Dh), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(1), (N, ps, G, Dh), dtype)
+    tables = jnp.asarray(rng.integers(1, N, (4, P)), jnp.int32)
+    decode_rows = [(0, 100), (1, 57), (2, 127)]
+    prefill_rows = [(3, 64 + i) for i in range(20)]
+    sched = build_duet_schedule(decode_rows, prefill_rows, block_q=bq)
+    num_src = len(decode_rows) + len(prefill_rows)
+    src_q = jax.random.normal(jax.random.PRNGKey(2), (num_src, H, Dh), dtype)
+    q = pack_duet_queries(sched, src_q)
+    out = duet_attention_paged(q, jnp.asarray(sched.row_pos)[:, None],
+                               jnp.asarray(sched.tile_slot), kp, vp, tables,
+                               block_q=bq, interpret=True)
+    got = unpack_duet_output(sched, out, num_src)
+    rows = decode_rows + prefill_rows
+    ref = duet_attention_paged_ref(src_q, jnp.asarray([r[0] for r in rows]),
+                                   jnp.asarray([r[1] for r in rows]),
+                                   kp, vp, tables)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_model_duet_step_matches_sequential():
+    """Equivalence pin for the fused duet super-iteration: one
+    ``duet_step_paged`` call (decode row + prefill chunk rows in ONE
+    duet_attention_paged grid per layer) must reproduce the sequential
+    ``decode_step_paged`` + ``prefill_paged`` pair — logits of both phases
+    and the page pools they wrote."""
+    from repro.configs import get_config, reduced
+    from repro.models.transformer import Model
+    from repro.serving.kvcache import (PagedKVCacheManager, PagePoolConfig,
+                                       init_page_pools)
+
+    cfg = reduced(get_config("qwen3-4b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mgr = PagedKVCacheManager(PagePoolConfig(num_pages=16, page_size=8))
+    pools = init_page_pools(cfg, mgr.pool)
+    state1 = model.init_state_cache(1)
+
+    rng = np.random.default_rng(11)
+    tblA = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    tblB = jnp.asarray([[5, 6, 7, 8]], jnp.int32)
+    toksA = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    toksB = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    C = toksB.shape[1]
+
+    # request A: prefill 12 tokens, then one decode step at pos 12
+    _, pools, _ = model.prefill_paged(params, toksA, pools, state1, tblA,
+                                      start_pos=jnp.int32(0))
+    tok_dec = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 1)), jnp.int32)
+
+    # sequential oracle: decode A, then prefill B's chunk
+    logits_dec, pools_seq, _ = model.decode_step_paged(
+        params, pools, state1, tok_dec, jnp.asarray([12], jnp.int32), tblA)
+    logits_pre, pools_seq, _ = model.prefill_paged(
+        params, toksB, pools_seq, state1, tblB, start_pos=jnp.int32(0))
+
+    # fused duet step over the same starting pools
+    sched = build_duet_schedule([(0, 12)], [(1, i) for i in range(C)],
+                                block_q=1)
+    row_tok = jnp.concatenate([tok_dec[:, 0], toksB[0]])[:, None]
+    row_pos = jnp.concatenate([jnp.asarray([12], jnp.int32),
+                               jnp.arange(C, dtype=jnp.int32)])
+    row_tbl = jnp.concatenate([tblA, jnp.repeat(tblB, C, axis=0)])
+    logits_duet, pools_duet, _ = model.duet_step_paged(
+        params, pools, model.init_state_cache(1 + C), row_tok, row_pos,
+        row_tbl, jnp.asarray(sched.row_src))
+
+    np.testing.assert_allclose(np.asarray(logits_duet[0]),
+                               np.asarray(logits_dec[0]),
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(logits_duet[C]),
+                               np.asarray(logits_pre[0]),
+                               atol=3e-5, rtol=3e-5)
+    for ps_seq, ps_duet in zip(pools_seq, pools_duet):
+        for a, b in zip(ps_seq, ps_duet):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       atol=3e-6, rtol=3e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -141,6 +141,59 @@ DRIVER = textwrap.dedent("""
         except ValueError:
             results["bad_split_raises"] = True
 
+    elif mode == "kernel":
+        # --- Pallas kernel path under TP=2 (ISSUE 9 tentpole) ----------
+        # the capability probe must resolve pallas (1 device) /
+        # pallas_sharded (TP=2, shard_map over the KV-head axis) with NO
+        # jnp fallback, and the token streams must stay byte-identical
+        kmodel = Model(cfg, attn_kernel=True)
+        kparams = kmodel.init(jax.random.PRNGKey(0))
+        reqs = shared_prefix_reqs()
+
+        def krun(engine_cls, ctx, rr=None, **ec_kw):
+            kw = dict(max_slots=4, max_len=256, token_budget=64)
+            kw.update(ec_kw)
+            rs = [copy.deepcopy(r) for r in (reqs if rr is None else rr)]
+            eng = engine_cls(kmodel, kparams, EngineConfig(**kw), ctx=ctx)
+            eng.submit(rs)
+            m = eng.run()
+            return eng, {str(r.rid): [int(t) for t in r.output_tokens]
+                         for r in m.requests}
+
+        e1, t1 = krun(DuetEngine, None)
+        e2, t2 = krun(DuetEngine, ctx2)
+        results["kernel_paths"] = [e1.kernel_path, e2.kernel_path]
+        results["kernel_model_attn"] = [e1.model.attn_kernel,
+                                        e2.model.attn_kernel]
+        results["kernel_tp2_match"] = t2 == t1
+        results["kernel_finished"] = len([v for v in t2.values() if v])
+
+        # async single-device: the duet-kernel fused program must hold the
+        # one-device_get-per-super-iteration contract and stay identical.
+        # Simultaneous arrivals with long outputs keep a decode batch
+        # resident while later prompts prefill — the mixed-phase plans the
+        # fused duet grid actually dispatches on
+        dreqs = [Request(rid=100 + i, arrival=0.0,
+                         prompt_len=40 + 8 * (i % 3),
+                         output_len=16 + (i % 5)) for i in range(8)]
+        s1, st1 = krun(DuetEngine, None, rr=dreqs, token_budget=48)
+        a1, at1 = krun(AsyncDuetEngine, None, rr=dreqs, token_budget=48)
+        results["kernel_async_match"] = at1 == st1
+        results["kernel_async_syncs"] = a1.dstats.host_syncs
+        results["kernel_async_super_iters"] = a1.dstats.super_iterations
+        results["kernel_duet_buckets"] = len(
+            [k for k in a1._programs if k[-1] is True])
+
+        # strict mode: an unusable kernel geometry must raise, not warn
+        badmodel = Model(cfg, attn_kernel=True)
+        try:
+            DuetEngine(badmodel, kparams,
+                       EngineConfig(max_slots=4, max_len=256, paged=False,
+                                    strict_kernel=True), ctx=ctx2)
+            results["strict_raises"] = False
+        except ValueError as e:
+            results["strict_raises"] = "attn_kernel" in str(e)
+
     elif mode == "preempt":
         # tiny pool: look-ahead shrink + victim preemption + recompute
         # must still match the unconstrained single-device oracle under TP
@@ -205,6 +258,38 @@ def test_split_geometry_and_mesh_validation(fast):
     assert fast["data_axes_pod"] == ["pod", "data"]
     assert fast["oversub_raises"] is not False   # message names the fix
     assert fast["bad_split_raises"]
+
+
+@pytest.fixture(scope="module")
+def kernel():
+    return _drive("kernel")
+
+
+def test_tp2_kernel_path_resolves_sharded(kernel):
+    """TP=2 with attn_kernel must keep the Pallas path (shard_map over the
+    KV-head axis) — the old behavior was a blanket warn-and-fallback."""
+    assert kernel["kernel_paths"] == ["pallas", "pallas_sharded"]
+    assert kernel["kernel_model_attn"] == [True, True], \
+        "the probe silently disabled the kernel path"
+
+
+def test_tp2_kernel_token_identical(kernel):
+    assert kernel["kernel_tp2_match"], \
+        "TP=2 sharded kernel diverged from the single-device kernel oracle"
+    assert kernel["kernel_finished"] == 6
+
+
+def test_duet_kernel_async_single_sync(kernel):
+    """The fused duet-kernel program keeps the async engine's contract:
+    at most one blocking device_get per super-iteration, token-identical."""
+    assert kernel["kernel_async_match"]
+    assert kernel["kernel_async_syncs"] <= kernel["kernel_async_super_iters"]
+    assert kernel["kernel_duet_buckets"] >= 1, \
+        "no duet-fused program was ever dispatched"
+
+
+def test_strict_kernel_raises_on_unusable_geometry(kernel):
+    assert kernel["strict_raises"]
 
 
 @pytest.mark.slow

@@ -1,13 +1,21 @@
 """Rule 6: Pallas kernel hygiene in ``kernels/``.
 
-Two classes of silent-wrong-answer bugs in Pallas TPU kernels:
+Four classes of silent-wrong-answer bugs in Pallas TPU kernels:
 
 * ``pl.load`` / ``pl.store`` without a ``mask=`` keyword — on ragged
   dimensions the unmasked lanes read/write out-of-bounds garbage,
 * grid / BlockSpec mismatches against the declared specs: an index-map
   lambda whose arity differs from ``grid rank + num_scalar_prefetch``,
   or whose returned index tuple length differs from the block shape —
-  both lower to wrong addressing, not to an error.
+  both lower to wrong addressing, not to an error,
+* index-map lambdas *within one* ``pallas_call`` disagreeing on arity —
+  even when the grid tuple cannot be resolved statically, the maps all
+  see the same ``(scalar-prefetch..., grid...)`` argument list, so two
+  different arities mean at least one spec is mis-addressed,
+* division by a raw ref read inside a ``pl.when`` reduction epilogue —
+  a fully-masked block leaves the softmax denominator at 0.0 and the
+  division mints NaNs; the denominator must go through
+  ``jnp.maximum(..., DENOM_EPS)`` (or a clip) first.
 
 Grid tuples assigned to a local (``grid = (heads, blocks)``) are
 resolved through the enclosing function.
@@ -29,8 +37,8 @@ def _tuple_len(node: ast.AST) -> Optional[int]:
 
 class PallasHygieneRule(Rule):
     name = "pallas-hygiene"
-    description = ("unmasked pl.load/pl.store and grid/BlockSpec "
-                   "mismatches in kernels/")
+    description = ("unmasked pl.load/pl.store, grid/BlockSpec mismatches "
+                   "and unguarded epilogue division in kernels/")
 
     def check(self, module: Module, project: Project):
         cfg = self.section(project)
@@ -62,6 +70,11 @@ class PallasHygieneRule(Rule):
 
     def _check_scope(self, scope, flag) -> None:
         for sub in ast.walk(scope):
+            if isinstance(sub, ast.FunctionDef):
+                for dec in sub.decorator_list:
+                    if isinstance(dec, ast.Call) and \
+                            (call_name(dec) or "") == "pl.when":
+                        self._check_epilogue(sub, flag)
             if not isinstance(sub, ast.Call):
                 continue
             name = call_name(sub) or ""
@@ -72,6 +85,36 @@ class PallasHygieneRule(Rule):
                               "a ragged dim read/write out of bounds")
             if leaf == "pallas_call":
                 self._check_pallas_call(scope, sub, flag)
+            # pl.when(cond)(lambda: ...) — the immediately-invoked form
+            if isinstance(sub.func, ast.Call) and \
+                    (call_name(sub.func) or "") == "pl.when":
+                for arg in sub.args:
+                    if isinstance(arg, ast.Lambda):
+                        self._check_epilogue(arg, flag)
+
+    # ------------------------------------------------------------------
+    def _raw_ref_read(self, node: ast.AST) -> bool:
+        """True for ``l_ref[...]`` / ``pl.load(l_ref, ...)`` style reads
+        (through trailing broadcast indexing like ``[..., None]``)."""
+        while isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Name):
+            return node.id.endswith("_ref")
+        if isinstance(node, ast.Call):
+            return (call_name(node) or "") == "pl.load"
+        return False
+
+    def _check_epilogue(self, fn, flag) -> None:
+        for sub in ast.walk(fn):
+            if not (isinstance(sub, ast.BinOp) and
+                    isinstance(sub.op, ast.Div)):
+                continue
+            denom = self._resolve(fn, sub.right)
+            if self._raw_ref_read(denom):
+                flag(sub, "division by a raw ref read in a pl.when "
+                          "epilogue — a fully-masked block leaves the "
+                          "denominator at 0.0; wrap it in "
+                          "jnp.maximum(..., DENOM_EPS)")
 
     # ------------------------------------------------------------------
     def _check_pallas_call(self, scope, call: ast.Call, flag) -> None:
@@ -104,6 +147,7 @@ class PallasHygieneRule(Rule):
                 elif val is not None:
                     specs.append(val)
 
+        arities: List[tuple] = []   # (arity, lambda node) per index map
         for spec in specs:
             if not (isinstance(spec, ast.Call) and
                     (call_name(spec) or "").split(".")[-1] == "BlockSpec"):
@@ -115,6 +159,7 @@ class PallasHygieneRule(Rule):
             if not isinstance(index_map, ast.Lambda):
                 continue
             arity = len(index_map.args.args)
+            arities.append((arity, index_map))
             if grid_rank is not None and \
                     arity != grid_rank + prefetch:
                 flag(index_map,
@@ -130,3 +175,18 @@ class PallasHygieneRule(Rule):
                 flag(index_map,
                      f"BlockSpec index map returns {ret_len} indices for "
                      f"a rank-{shape_len} block shape")
+
+        # even with an unresolvable grid, every index map in one
+        # pallas_call sees the same (prefetch..., grid...) argument list —
+        # mixed arities mean at least one spec is mis-addressed. Skip when
+        # the grid is known: the per-spec check above already names the
+        # offender.
+        if grid_rank is None and len({a for a, _ in arities}) > 1:
+            counts = sorted({a for a, _ in arities})
+            for arity, lam in arities:
+                if arity != counts[-1]:
+                    flag(lam,
+                         f"BlockSpec index map takes {arity} args but "
+                         "other index maps in the same pallas_call take "
+                         f"{counts[-1]} — all maps see the same "
+                         "(scalar-prefetch..., grid...) argument list")
