@@ -36,7 +36,7 @@ def main(argv=None) -> None:
                             fig6_end_to_end, fig7_multichip,
                             fig8_roofline_accuracy, fig9_static_partition,
                             fig10_breakdown, gpu_regime, kernel_micro,
-                            prefix_cache_sweep, roofline_table,
+                            load_sweep, prefix_cache_sweep, roofline_table,
                             table2_sensitivity, table3_cluster)
     suites = [
         ("kernel_micro", kernel_micro),
@@ -54,6 +54,7 @@ def main(argv=None) -> None:
         ("table3", table3_cluster),
         ("prefix_cache", prefix_cache_sweep),
         ("roofline", roofline_table),
+        ("load_sweep", load_sweep),
     ]
     failures = []
     suite_records = {}

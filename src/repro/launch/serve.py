@@ -47,8 +47,12 @@ from repro.serving.async_engine import (AsyncDuetEngine, FinishEvent,
                                         TokenEvent)
 from repro.serving.engine import DuetEngine, EngineConfig
 from repro.serving.kvcache import DEFAULT_PAGE_SIZE, KV_QUANT_MODES
+from repro.serving.loadgen import (ARRIVAL_PROCESSES, SERVICE_MIXES,
+                                   ArrivalSpec, LoadGenerator, LoadSpec,
+                                   ServiceSpec, qps_for_rho, request_cost)
 from repro.serving.request import synth_prompt_tokens
-from repro.serving.router import ROUTER_POLICIES, Router, RouterEvent
+from repro.serving.router import (ROUTER_POLICIES, ElasticConfig, Router,
+                                  RouterEvent, ScaleEvent)
 from repro.serving.traces import TRACES, synth_trace
 
 
@@ -109,6 +113,45 @@ def build_parser() -> argparse.ArgumentParser:
                          "placement, paged KV pool and prefix cache; "
                          "needs tp*dp visible devices (XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N on CPU)")
+    # elastic data-parallelism: the active replica set breathes between
+    # --min-dp and --max-dp against measured outstanding tokens; a drained
+    # replica requeues its work via the preempt->recompute path
+    ap.add_argument("--elastic", action="store_true",
+                    help="scale the active replica set against load: the "
+                         "mesh holds --max-dp replicas but dispatch starts "
+                         "at --min-dp; scale decisions print as JSONL "
+                         "'scale' events under --stream")
+    ap.add_argument("--min-dp", type=int, default=1,
+                    help="initial/minimum active replicas (--elastic)")
+    ap.add_argument("--max-dp", type=int, default=None,
+                    help="maximum replicas = mesh data extent (--elastic; "
+                         "default: --dp, or 2 when --dp is 1)")
+    ap.add_argument("--scale-up-tokens", type=int, default=512,
+                    help="scale up when mean outstanding tokens per active "
+                         "replica exceed this (--elastic)")
+    ap.add_argument("--scale-down-tokens", type=int, default=64,
+                    help="scale down when the cluster total fits under "
+                         "this per replica with one fewer (--elastic)")
+    ap.add_argument("--scale-cooldown", type=float, default=0.5,
+                    help="minimum virtual seconds between scale actions")
+    ap.add_argument("--scale-interval", type=float, default=0.25,
+                    help="drain-phase control-tick grid in virtual seconds")
+    # stochastic load generation (serving/loadgen.py): any non-default
+    # selection switches trace synthesis from synth_trace to the seeded
+    # open-loop generator
+    ap.add_argument("--arrival", choices=list(ARRIVAL_PROCESSES),
+                    default="poisson",
+                    help="arrival process: poisson, or mmpp (2-state "
+                         "Markov-modulated bursts at the same mean rate)")
+    ap.add_argument("--service-mix", choices=list(SERVICE_MIXES),
+                    default="lognormal",
+                    help="request-length mix: the trace's lognormal, or a "
+                         "two-point mixture with a heavy tail at the same "
+                         "mean")
+    ap.add_argument("--rho", type=float, default=None,
+                    help="target utilisation: sets qps to rho * k / E[S] "
+                         "using the roofline per-request cost estimate "
+                         "(overrides --qps)")
     ap.add_argument("--router-policy", choices=list(ROUTER_POLICIES),
                     default="round-robin",
                     help="dispatch policy for --dp > 1: round-robin "
@@ -219,14 +262,51 @@ def main(argv=None):
     model = Model(cfg, attn_kernel=args.attn_kernel)
     params = model.init(jax.random.PRNGKey(args.seed))
 
+    # elastic replica set: the mesh holds max-dp replicas; dispatch starts
+    # at min-dp and breathes against measured outstanding tokens
+    elastic_cfg = None
+    dp = args.dp
+    if args.elastic:
+        dp = args.max_dp or max(args.dp, 2)
+        if args.dp > 1 and dp != args.dp:
+            raise SystemExit("--max-dp contradicts --dp; pass one of them")
+        elastic_cfg = ElasticConfig(
+            min_replicas=args.min_dp, max_replicas=dp,
+            scale_up_tokens=args.scale_up_tokens,
+            scale_down_tokens=args.scale_down_tokens,
+            cooldown_s=args.scale_cooldown,
+            check_interval=args.scale_interval)
+    elif args.max_dp is not None or args.min_dp != 1:
+        _warn("--min-dp/--max-dp only apply with --elastic; ignored")
+
     # mesh-aware serving: a real (dp, tp) mesh when requested, otherwise
     # the engine's default degenerate 1-device mesh
     ctx = None
-    if args.tp > 1 or args.dp > 1:
-        ctx = DeviceContext.for_shape(cfg, tp=args.tp, dp=args.dp)
+    if args.tp > 1 or dp > 1:
+        ctx = DeviceContext.for_shape(cfg, tp=args.tp, dp=dp)
 
-    reqs = synth_trace(args.trace, args.num_requests, args.qps,
-                       seed=args.seed)
+    # trace synthesis: the seeded open-loop generator when any stochastic
+    # load knob is non-default, the legacy synth_trace otherwise
+    qps = args.qps
+    use_loadgen = (args.arrival != "poisson"
+                   or args.service_mix != "lognormal"
+                   or args.rho is not None)
+    if use_loadgen:
+        trace = TRACES[args.trace]
+        service = ServiceSpec(trace=trace, mix=args.service_mix)
+        if args.rho is not None:
+            cost = request_cost(cfg, service, units=max(1, args.tp),
+                                tp=args.tp,
+                                token_budget=args.token_budget)
+            qps = qps_for_rho(args.rho, cost, replicas=dp)
+            _warn(f"rho={args.rho}: roofline E[S]={cost:.4f}s -> "
+                  f"qps={qps:.3f} over {dp} replica(s)")
+        spec = LoadSpec(arrival=ArrivalSpec(process=args.arrival, qps=qps),
+                        service=service, seed=args.seed)
+        reqs = LoadGenerator(spec).generate(args.num_requests)
+    else:
+        reqs = synth_trace(args.trace, args.num_requests, qps,
+                           seed=args.seed)
     reqs = _apply_shared_prefix(reqs, args.shared_prefix_len,
                                 cfg.vocab_size, args.seed,
                                 every=args.shared_prefix_every)
@@ -273,15 +353,22 @@ def main(argv=None):
                               "matched_tokens": ev.matched_tokens,
                               "outstanding": list(ev.outstanding),
                               "t": round(ev.t, 6)}))
+        elif isinstance(ev, ScaleEvent):
+            print(json.dumps({"event": "scale", "action": ev.action,
+                              "replica": ev.replica,
+                              "active": list(ev.active),
+                              "outstanding": list(ev.outstanding),
+                              "requeued": ev.requeued,
+                              "t": round(ev.t, 6)}))
 
-    if args.dp > 1:
+    if dp > 1:
         # cluster path: N real replicas behind the dispatch policy; the
         # router drives sync or async replicas on the shared virtual clock
         router = Router(model, params, ec, ctx=ctx,
                         policy=args.router_policy,
                         engine_cls=AsyncDuetEngine if args.stream
                         else DuetEngine,
-                        seed=args.seed)
+                        seed=args.seed, elastic=elastic_cfg)
         router.submit(reqs)
         router.run(on_event=print_event if args.stream else None)
         if args.stream:

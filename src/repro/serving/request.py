@@ -161,9 +161,15 @@ class ServingMetrics:
             "prefill_tokens_cached": sum(r.cached_prompt
                                          for r in self.requests),
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+            "p50_ttft_s": _pct(ttfts, 0.50),
+            "p95_ttft_s": _pct(ttfts, 0.95),
             "p99_ttft_s": _pct(ttfts, 0.99),
+            "p999_ttft_s": _pct(ttfts, 0.999),
             "mean_tbt_s": sum(tbts) / len(tbts) if tbts else float("nan"),
+            "p50_tbt_s": _pct(tbts, 0.50),
+            "p95_tbt_s": _pct(tbts, 0.95),
             "p99_tbt_s": _pct(tbts, 0.99),
+            "p999_tbt_s": _pct(tbts, 0.999),
             "request_throughput": len(finished) / dur,
             "output_token_throughput": out_tokens / dur,
             "total_token_throughput": total_tokens / dur,

@@ -59,6 +59,91 @@ class RouterEvent:
     t: float                     # virtual-clock route (= arrival) time
 
 
+@dataclass(frozen=True)
+class ScaleEvent:
+    """One elastic scaling decision (streamed like RouterEvent)."""
+    action: str                  # "up" | "down"
+    replica: int                 # replica activated / drained
+    active: tuple                # active replica set AFTER the action
+    outstanding: tuple           # per-replica outstanding tokens at decision
+    requeued: int                # requests drained & re-routed ("down" only)
+    t: float                     # virtual-clock decision time
+
+
+# ----------------------------------------------------------------- elastic
+@dataclass(frozen=True)
+class ElasticConfig:
+    """Elastic data-parallelism policy knobs (DynaServe-style).
+
+    Scale-up fires when the *mean* outstanding tokens per active replica
+    exceed ``scale_up_tokens``; scale-down fires when the cluster total
+    would fit under ``scale_down_tokens`` per replica with one replica
+    fewer (hysteresis lives in the gap between the two thresholds).
+    ``check_interval`` is the drain-phase control-tick grid — decisions are
+    also evaluated at every arrival.
+    """
+    min_replicas: int = 1
+    max_replicas: int = 2
+    scale_up_tokens: int = 512
+    scale_down_tokens: int = 64
+    cooldown_s: float = 0.5
+    check_interval: float = 0.25
+
+    def __post_init__(self):
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError(
+                f"need 1 <= min_replicas <= max_replicas, got "
+                f"{self.min_replicas}..{self.max_replicas}")
+        if self.check_interval <= 0:
+            raise ValueError("check_interval must be > 0")
+
+
+class ElasticPolicy:
+    """Pure scaling decision shared by the real :class:`Router` and
+    ``ClusterSim`` — one implementation, so sim-vs-real scaling decision
+    *sequences* stay pinned the same way dispatch decisions are.
+
+    Deterministic by construction: replica 0 is never drained (it owns
+    prompt materialisation and anchors min_replicas >= 1), scale-up
+    activates the lowest inactive index, scale-down drains the
+    least-loaded non-zero active replica (ties on index).
+    """
+
+    def __init__(self, cfg: ElasticConfig):
+        self.cfg = cfg
+        self._last_change = -math.inf
+
+    def decide(self, outstanding: Sequence[int],
+               active: Sequence[int], t: float):
+        """One control-tick decision.
+
+        Args:
+            outstanding: per-replica outstanding tokens, indexed by global
+                replica id (length = max_replicas).
+            active: sorted global ids of currently-active replicas.
+            t: virtual-clock decision time (cooldown reference).
+
+        Returns:
+            ``("up", replica)`` / ``("down", replica)`` or ``None``.
+        """
+        cfg = self.cfg
+        if t - self._last_change < cfg.cooldown_s:
+            return None
+        total = sum(outstanding[i] for i in active)
+        if len(active) < cfg.max_replicas and \
+                total > cfg.scale_up_tokens * len(active):
+            idx = min(i for i in range(cfg.max_replicas) if i not in active)
+            self._last_change = t
+            return ("up", idx)
+        if len(active) > cfg.min_replicas and \
+                total <= cfg.scale_down_tokens * (len(active) - 1):
+            victims = [i for i in active if i != 0]
+            idx = min(victims, key=lambda i: (outstanding[i], i))
+            self._last_change = t
+            return ("down", idx)
+        return None
+
+
 # ---------------------------------------------------------------- policies
 class DispatchPolicy:
     """Strategy interface: pick a replica for one request.
@@ -216,7 +301,8 @@ class Router:
                  replicas: Optional[int] = None,
                  policy: Union[str, DispatchPolicy] = "round-robin",
                  engine_cls=DuetEngine,
-                 hw: HardwareSpec = TPU_V5E, seed: int = 0):
+                 hw: HardwareSpec = TPU_V5E, seed: int = 0,
+                 elastic: Optional[ElasticConfig] = None):
         """Args:
             model / params / engine_cfg / hw / seed: forwarded to every
                 replica engine (each replica re-places ``params`` for its
@@ -225,19 +311,26 @@ class Router:
                 TP submesh per replica. Defaults to a ``(data=replicas,
                 model=engine_cfg.tp)`` test mesh.
             replicas: replica count; defaults to ``ctx.dp`` (or 2 when no
-                context is given).
+                context is given). With ``elastic`` this is the *maximum*
+                replica count — all engines are built up front (each owns
+                its submesh), but dispatch only sees the active subset.
             policy: dispatch policy name (:data:`ROUTER_POLICIES`) or a
                 :class:`DispatchPolicy` instance.
             engine_cls: ``DuetEngine`` (default) or ``AsyncDuetEngine``
                 (streaming token events through :meth:`events`).
+            elastic: optional :class:`ElasticConfig` — scale the active
+                replica set against measured outstanding tokens, draining
+                scaled-down replicas via the preempt→recompute requeue
+                path and re-routing their requests.
 
         Raises:
-            ValueError: replica count contradicts ``ctx.dp``, or fewer
-                than one replica requested.
+            ValueError: replica count contradicts ``ctx.dp`` (or the
+                elastic ``max_replicas``), or fewer than one replica
+                requested.
         """
         cfg = model.cfg
         if ctx is None:
-            n = replicas or 2
+            n = replicas or (elastic.max_replicas if elastic else 2)
             ctx = DeviceContext.for_shape(cfg, tp=max(1, engine_cfg.tp),
                                           dp=n)
         if replicas is None:
@@ -248,6 +341,11 @@ class Router:
             raise ValueError(
                 f"replicas={replicas} contradicts the context's data axes "
                 f"(dp={ctx.dp}); pass one geometry")
+        if elastic is not None and elastic.max_replicas != replicas:
+            raise ValueError(
+                f"elastic.max_replicas={elastic.max_replicas} contradicts "
+                f"the replica count ({replicas}); the mesh must hold the "
+                "maximum")
         self.ctx = ctx
         self.cfg = cfg
         self.ec = engine_cfg
@@ -261,6 +359,11 @@ class Router:
         self.decisions: List[RouterEvent] = []
         self._metrics: Optional[ServingMetrics] = None
         self._replica_metrics: List[ServingMetrics] = []
+        self.elastic = elastic
+        self._elastic_policy = ElasticPolicy(elastic) if elastic else None
+        self._active: List[int] = list(range(
+            elastic.min_replicas if elastic else len(self.engines)))
+        self.scale_events: List[ScaleEvent] = []
 
     # ------------------------------------------------------------- frontend
     @property
@@ -305,25 +408,86 @@ class Router:
                 # contents) at route time
                 for eng in self.engines:
                     yield from eng.service_until(r.arrival)
+                if self.elastic:
+                    yield from self._control(r.arrival)
                 yield self._route(r)
-            for eng in self.engines:
-                yield from eng.service_until(math.inf)
+            if self.elastic:
+                yield from self._elastic_drain()
+            else:
+                for eng in self.engines:
+                    yield from eng.service_until(math.inf)
             # an event callback may have submitted more work during the
             # drain — loop back instead of dropping it
             if not self._pending:
                 break
 
-    def _route(self, r: Request) -> RouterEvent:
-        idx, matched = self.policy.choose(self._views,
-                                          r.prompt_tokens)
+    def _route(self, r: Request, at: Optional[float] = None) -> RouterEvent:
+        # elastic mode dispatches over the *active* subset; the policy sees
+        # positional views (its bookkeeping is positional in both the real
+        # router and ClusterSim, so decision sequences still line up)
+        views = [self._views[i] for i in self._active]
+        local, matched = self.policy.choose(views, r.prompt_tokens)
+        idx = self._active[local]
         outstanding = tuple(v.outstanding_tokens() for v in self._views)
-        self.policy.record(idx)
+        self.policy.record(local)
         self.engines[idx].submit(r)
         ev = RouterEvent(rid=r.rid, replica=idx, policy=self.policy.name,
                          matched_tokens=matched, outstanding=outstanding,
-                         t=r.arrival)
+                         t=r.arrival if at is None else at)
         self.decisions.append(ev)
         return ev
+
+    # ------------------------------------------------------------- elastic
+    def _control(self, t: float) -> Iterator:
+        """One elastic control tick: observe outstanding tokens, apply the
+        shared :class:`ElasticPolicy`, realise the decision. A scale-down
+        drains the victim through the engines' preempt→recompute path and
+        re-routes the drained requests over the remaining active set."""
+        decision = self._elastic_policy.decide(
+            [v.outstanding_tokens() for v in self._views], self._active, t)
+        if decision is None:
+            return
+        action, idx = decision
+        if action == "up":
+            self._active = sorted(self._active + [idx])
+            ev = ScaleEvent(
+                "up", idx, tuple(self._active),
+                tuple(v.outstanding_tokens() for v in self._views), 0, t)
+            self.scale_events.append(ev)
+            yield ev
+            return
+        drained, evs = self.engines[idx].drain_requests()
+        yield from evs       # flushed in-flight tokens must still stream
+        self._active = [i for i in self._active if i != idx]
+        ev = ScaleEvent(
+            "down", idx, tuple(self._active),
+            tuple(v.outstanding_tokens() for v in self._views),
+            len(drained), t)
+        self.scale_events.append(ev)
+        yield ev
+        for r in drained:
+            yield self._route(r, at=t)
+
+    def _elastic_drain(self) -> Iterator:
+        """Drain phase with live control: advance the cluster in
+        ``check_interval`` steps (grid-aligned on the virtual clock, so
+        sim and real evaluate at the same absolute tick times) and run a
+        control tick after each, until every engine is idle. This is where
+        scale-downs happen — load subsides as the tail of the trace
+        completes."""
+        ci = self.elastic.check_interval
+        while True:
+            if self._pending:
+                return           # mid-drain submission: loop back to route
+            if all(e.outstanding_tokens() == 0 for e in self.engines):
+                for eng in self.engines:
+                    yield from eng.service_until(math.inf)
+                return
+            now = max(e.now for e in self.engines)
+            horizon = (math.floor(now / ci) + 1) * ci
+            for eng in self.engines:
+                yield from eng.service_until(horizon)
+            yield from self._control(max(e.now for e in self.engines))
 
     def run(self, on_event=None) -> ServingMetrics:
         """Route + serve every submitted request to a terminal state.
@@ -376,7 +540,7 @@ class Router:
         counts = [0] * self.n_replicas
         for d in self.decisions:
             counts[d.replica] += 1
-        return {
+        out = {
             "policy": self.policy.name,
             "replicas": self.n_replicas,
             "dispatch_counts": counts,
@@ -384,6 +548,22 @@ class Router:
             "prefix_routed_tokens": sum(d.matched_tokens
                                         for d in self.decisions),
         }
+        if self.elastic:
+            out["elastic"] = {
+                "min_replicas": self.elastic.min_replicas,
+                "max_replicas": self.elastic.max_replicas,
+                "scale_ups": sum(1 for e in self.scale_events
+                                 if e.action == "up"),
+                "scale_downs": sum(1 for e in self.scale_events
+                                   if e.action == "down"),
+                "requeued_requests": sum(e.requeued
+                                         for e in self.scale_events),
+                "final_active": list(self._active),
+                "events": [{"action": e.action, "replica": e.replica,
+                            "requeued": e.requeued, "t": round(e.t, 6)}
+                           for e in self.scale_events],
+            }
+        return out
 
     def summary(self) -> dict:
         """Cluster-level summary: merged TTFT/TBT/throughput plus SLO

@@ -22,8 +22,9 @@ Instance kinds:
 from __future__ import annotations
 
 import copy
+import math
 from dataclasses import dataclass
-from typing import List, Sequence, Union
+from typing import List, Optional, Sequence, Union
 
 from repro.configs.base import GQA_KINDS, MLA_KINDS, ArchConfig
 from repro.core.multiplexer import AdaptiveMultiplexer
@@ -32,7 +33,8 @@ from repro.core.roofline import (HardwareSpec, RequestLoad, RooflineModel,
 from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, PagedKVCacheManager,
                                    PagePoolConfig, block_keys)
 from repro.serving.request import Phase, Request, ServingMetrics
-from repro.serving.router import (DispatchPolicy, RouterEvent,
+from repro.serving.router import (DispatchPolicy, ElasticConfig,
+                                  ElasticPolicy, RouterEvent, ScaleEvent,
                                   make_dispatch_policy)
 from repro.serving.scheduler import (BasePolicy, ChunkedPrefillPolicy,
                                      DuetPolicy, IterationPlan,
@@ -187,7 +189,12 @@ class InstanceSim:
                 # prompt fully processed -> first token sampled this iteration
                 self.state.prefilling.remove(r)
                 r.phase = Phase.DECODE
-                r.record_token(ts)
+                # ...unless this is a resume-from-preemption prefill: the
+                # replayed outputs were recorded before the preemption and
+                # the next decode input was sampled back then (the real
+                # engine's "resumed" status samples nothing either)
+                if not r.resume_len:
+                    r.record_token(ts)
                 if r.done:
                     self.policy.release(r)
                     self.finished.append(r)
@@ -235,6 +242,36 @@ class InstanceSim:
         n += sum(r.remaining_prompt + max(0, r.output_len - r.generated)
                  for r in self._queue)
         return n
+
+    def drain_requests(self):
+        """Evict every live request for re-dispatch elsewhere (elastic
+        scale-down) — the simulator twin of ``DuetEngine.drain_requests``:
+        resident requests take the recompute-from-prompt preemption
+        bookkeeping (``resume_len`` freezes the replay target; the resumed
+        prefill samples no token), queued ones are withdrawn as-is, and
+        all of them leave this replica's accounting.
+
+        Returns:
+            ``(requests, events)`` with requests sorted by
+            ``(arrival, rid)`` (events always ``[]`` — the sim streams
+            nothing), matching the engines' signature."""
+        for r in list(self.state.running) + list(self.state.prefilling):
+            self.policy.release(r)
+            if r.generated:
+                r.resume_len = r.prompt_len + r.generated - 1
+            r.prefilled = 0
+            r.preemptions += 1
+            r.phase = Phase.WAITING
+            self.state.waiting.append(r)
+        self.state.running.clear()
+        self.state.prefilling.clear()
+        drained = list(self.state.waiting) + list(self._queue)
+        self.state.waiting.clear()
+        self._queue.clear()
+        gone = {id(r) for r in drained}
+        self._all = [r for r in self._all if id(r) not in gone]
+        drained.sort(key=lambda r: (r.arrival, r.rid))
+        return drained, []
 
     def metrics(self) -> ServingMetrics:
         """Full-lifetime view: every request ever submitted, clock as
@@ -322,15 +359,23 @@ class ClusterSim:
 
     def __init__(self, make_instance, n: int,
                  policy: Union[str, DispatchPolicy] = "round-robin",
-                 page_size: int = DEFAULT_PAGE_SIZE):
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 elastic: Optional[ElasticConfig] = None):
         """Args:
             make_instance: ``replica_index -> InstanceSim`` factory.
-            n: replica count.
+            n: replica count (with ``elastic``: the maximum; must equal
+                ``elastic.max_replicas``).
             policy: dispatch policy name (``router.ROUTER_POLICIES``) or
                 instance; default round-robin (the Fig. 2 baseline and
                 the real router's parity oracle).
             page_size: granularity of the modeled prefix index (match the
                 engine's page size for sim-vs-real comparisons).
+            elastic: optional ``router.ElasticConfig`` — the *identical*
+                scaling policy the real router runs, so sim-vs-real
+                scaling decision sequences stay pinned. Note one modeled
+                gap: drained sim requests carry lengths only, so a
+                prefix-affinity re-route degrades to the load fallback
+                (use round-robin/least-loaded for elastic parity pins).
         """
         self.instances: List[InstanceSim] = [make_instance(i)
                                              for i in range(n)]
@@ -341,41 +386,94 @@ class ClusterSim:
         self._views = [_SimReplicaView(inst, idx) for inst, idx
                        in zip(self.instances, self._indices)]
         self.decisions: List[RouterEvent] = []
+        if elastic is not None and elastic.max_replicas != n:
+            raise ValueError(
+                f"elastic.max_replicas={elastic.max_replicas} contradicts "
+                f"the replica count ({n})")
+        self.elastic = elastic
+        self._elastic_policy = ElasticPolicy(elastic) if elastic else None
+        self._active: List[int] = list(range(
+            elastic.min_replicas if elastic else n))
+        self.scale_events: List[ScaleEvent] = []
+
+    def _route(self, r: Request, t: float):
+        """One dispatch over the active subset (the whole cluster when not
+        elastic) — identical positional-policy semantics to the real
+        ``Router._route``."""
+        # one hashing pass per dispatch: the digests feed the policy's
+        # probe AND the chosen replica's hit-model/insert below
+        keys = None if r.prompt_tokens is None \
+            else block_keys(r.prompt_tokens, self._page_size)
+        views = [self._views[i] for i in self._active]
+        local, matched = self.policy.choose(views, r.prompt_tokens, keys)
+        idx = self._active[local]
+        self.policy.record(local)
+        if keys is not None:
+            # model the hit on the CHOSEN replica regardless of policy
+            # — a real replica's kv_mgr serves its cached pages even
+            # when a blind policy routed the request there — capped
+            # the way the real lock is: at most prompt_len-1 cached so
+            # one suffix token recomputes
+            hit = self._indices[idx].match_keys(keys)
+            if hit:
+                r.cached_prompt = min(hit, r.prompt_len - 1)
+            self._indices[idx].insert_keys(keys)
+            r.prompt_tokens = None   # sim replicas consume lengths only
+        self.decisions.append(RouterEvent(
+            rid=r.rid, replica=idx, policy=self.policy.name,
+            matched_tokens=matched,
+            outstanding=tuple(v.outstanding_tokens()
+                              for v in self._views),
+            t=t))
+        self.instances[idx].submit(r)
+
+    def _control(self, t: float):
+        """One elastic control tick (the sim half of the pinned scaling
+        contract — same :class:`ElasticPolicy`, same realisation order)."""
+        decision = self._elastic_policy.decide(
+            [v.outstanding_tokens() for v in self._views], self._active, t)
+        if decision is None:
+            return
+        action, idx = decision
+        if action == "up":
+            self._active = sorted(self._active + [idx])
+            self.scale_events.append(ScaleEvent(
+                "up", idx, tuple(self._active),
+                tuple(v.outstanding_tokens() for v in self._views), 0, t))
+            return
+        drained, _ = self.instances[idx].drain_requests()
+        self._active = [i for i in self._active if i != idx]
+        self.scale_events.append(ScaleEvent(
+            "down", idx, tuple(self._active),
+            tuple(v.outstanding_tokens() for v in self._views),
+            len(drained), t))
+        for r in drained:
+            self._route(r, t)
 
     def run(self, requests: List[Request]) -> ServingMetrics:
         """Route + simulate the full trace; returns cluster-merged
         metrics (duration = the slowest replica's clock). Dispatch
-        decisions are recorded in ``self.decisions`` for parity checks
-        against the real router."""
+        decisions are recorded in ``self.decisions`` (and scaling
+        decisions in ``self.scale_events``) for parity checks against the
+        real router."""
         reqs = sorted(copy.deepcopy(requests), key=lambda r: r.arrival)
         for r in reqs:
             for inst in self.instances:
                 inst.service_until(r.arrival)
-            # one hashing pass per dispatch: the digests feed the policy's
-            # probe AND the chosen replica's hit-model/insert below
-            keys = None if r.prompt_tokens is None \
-                else block_keys(r.prompt_tokens, self._page_size)
-            idx, matched = self.policy.choose(self._views, r.prompt_tokens,
-                                              keys)
-            self.policy.record(idx)
-            if keys is not None:
-                # model the hit on the CHOSEN replica regardless of policy
-                # — a real replica's kv_mgr serves its cached pages even
-                # when a blind policy routed the request there — capped
-                # the way the real lock is: at most prompt_len-1 cached so
-                # one suffix token recomputes
-                hit = self._indices[idx].match_keys(keys)
-                if hit:
-                    r.cached_prompt = min(hit, r.prompt_len - 1)
-                self._indices[idx].insert_keys(keys)
-                r.prompt_tokens = None   # sim replicas consume lengths only
-            self.decisions.append(RouterEvent(
-                rid=r.rid, replica=idx, policy=self.policy.name,
-                matched_tokens=matched,
-                outstanding=tuple(v.outstanding_tokens()
-                                  for v in self._views),
-                t=r.arrival))
-            self.instances[idx].submit(r)
+            if self.elastic:
+                self._control(r.arrival)
+            self._route(r, r.arrival)
+        if self.elastic:
+            # drain with live control, on the same absolute check_interval
+            # grid the real router steps (scale-downs happen here)
+            ci = self.elastic.check_interval
+            while any(inst.outstanding_tokens() > 0
+                      for inst in self.instances):
+                now = max(inst.now for inst in self.instances)
+                horizon = (math.floor(now / ci) + 1) * ci
+                for inst in self.instances:
+                    inst.service_until(horizon)
+                self._control(max(inst.now for inst in self.instances))
         merged = ServingMetrics()
         for inst in self.instances:
             inst.service_until(float("inf"))

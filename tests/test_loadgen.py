@@ -1,0 +1,178 @@
+"""Stochastic load generator (ISSUE 10): seeded determinism, distribution
+shape, ρ targeting.
+
+Pinned contracts:
+  * same LoadSpec ⇒ byte-identical trace (fingerprint equality); any seed
+    change ⇒ a different trace;
+  * Poisson gaps match the target rate with CV ≈ 1; MMPP keeps the same
+    long-run rate but with gap CV clearly above Poisson (burstiness);
+  * the two-point mixture preserves the trace's mean lengths (the ρ target
+    survives the heavy tail) and clipping respects the spec bounds;
+  * ρ targeting is the M/G/k identity λ = ρ·k/E[S];
+  * arrival sequences are strictly increasing with non-negative gaps for
+    every process (seed-swept; the hypothesis variants live in
+    test_properties.py).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.loadgen import (ARRIVAL_PROCESSES, ArrivalSpec,
+                                   LoadGenerator, LoadSpec, ServiceSpec,
+                                   _mean_gap_cv, make_load, qps_for_rho,
+                                   request_cost, trace_fingerprint)
+from repro.serving.traces import TRACES
+
+TRACE = TRACES["azure-conv"]
+
+
+def _gen(n=200, seed=0, **kw):
+    return make_load("azure-conv", seed=seed, **kw).generate(n)
+
+
+# ------------------------------------------------------------ determinism
+def test_same_seed_byte_identical():
+    a = _gen(seed=7, process="mmpp", mix="mixture")
+    b = _gen(seed=7, process="mmpp", mix="mixture")
+    assert trace_fingerprint(a) == trace_fingerprint(b)
+    for ra, rb in zip(a, b):
+        assert (ra.arrival, ra.prompt_len, ra.output_len) == \
+               (rb.arrival, rb.prompt_len, rb.output_len)
+
+
+def test_different_seed_different_trace():
+    fps = {trace_fingerprint(_gen(seed=s)) for s in range(5)}
+    assert len(fps) == 5
+
+
+def test_substreams_isolate_axes():
+    # changing ONLY the arrival process leaves the length draw untouched
+    pois = _gen(seed=3, process="poisson")
+    mmpp = _gen(seed=3, process="mmpp")
+    assert [r.prompt_len for r in pois] == [r.prompt_len for r in mmpp]
+    assert [r.output_len for r in pois] == [r.output_len for r in mmpp]
+    assert [r.arrival for r in pois] != [r.arrival for r in mmpp]
+
+
+# ----------------------------------------------------- distribution shape
+def test_poisson_rate_and_cv():
+    arr = make_load("azure-conv", qps=8.0, seed=0).arrivals(20_000)
+    mean, cv = _mean_gap_cv(arr)
+    assert mean == pytest.approx(1 / 8.0, rel=0.05)
+    assert cv == pytest.approx(1.0, abs=0.05)   # exponential gaps: CV = 1
+
+
+def test_mmpp_same_rate_but_burstier():
+    qps = 8.0
+    pois = make_load("azure-conv", qps=qps, seed=1).arrivals(20_000)
+    mmpp = make_load("azure-conv", qps=qps, process="mmpp",
+                     seed=1).arrivals(20_000)
+    # long-run average rate pinned to qps (loose: one sample path)
+    assert mmpp[-1] / len(mmpp) == pytest.approx(1 / qps, rel=0.15)
+    _, cv_p = _mean_gap_cv(pois)
+    _, cv_m = _mean_gap_cv(mmpp)
+    assert cv_m > cv_p + 0.1, "MMPP gaps must be clearly over-dispersed"
+
+
+def test_mmpp_rates_normalised_to_qps():
+    a = ArrivalSpec(process="mmpp", qps=6.0, burst_factor=4.0,
+                    mean_burst_s=2.0, mean_calm_s=8.0)
+    calm, burst = a.rates()
+    assert burst == pytest.approx(4.0 * calm)
+    # time-average over the dwell cycle equals qps
+    avg = (calm * 8.0 + burst * 2.0) / 10.0
+    assert avg == pytest.approx(6.0)
+
+
+def test_lognormal_matches_trace_mean():
+    isl, osl = make_load("azure-conv", seed=0).lengths(20_000)
+    assert isl.mean() == pytest.approx(TRACE.mean_isl, rel=0.1)
+    assert osl.mean() == pytest.approx(TRACE.mean_osl, rel=0.1)
+
+
+def test_mixture_preserves_means_with_heavy_tail():
+    gen = make_load("azure-conv", mix="mixture", seed=0)
+    isl, osl = gen.lengths(20_000)
+    # mean-preserving: the base-class shrink cancels the heavy class
+    assert isl.mean() == pytest.approx(TRACE.mean_isl, rel=0.1)
+    assert osl.mean() == pytest.approx(TRACE.mean_osl, rel=0.1)
+    # ... but the tail is heavier than the plain lognormal's
+    base_isl, _ = make_load("azure-conv", seed=0).lengths(20_000)
+    assert np.percentile(isl, 99.5) > np.percentile(base_isl, 99.5)
+
+
+def test_clipping_respects_spec_bounds():
+    reqs = _gen(n=5_000, mix="mixture", heavy_mult=64.0, p_heavy=0.3)
+    assert all(8 <= r.prompt_len <= TRACE.max_isl for r in reqs)
+    assert all(1 <= r.output_len <= TRACE.max_osl for r in reqs)
+
+
+# ------------------------------------------------------------ ρ targeting
+def test_qps_for_rho_identity():
+    assert qps_for_rho(0.5, 2.0) == pytest.approx(0.25)
+    assert qps_for_rho(0.5, 2.0, replicas=4) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        qps_for_rho(0.0, 1.0)
+    with pytest.raises(ValueError):
+        qps_for_rho(0.5, 0.0)
+
+
+def test_request_cost_positive_and_scales_down_with_units():
+    cfg = get_config("qwen3-4b")
+    c1 = request_cost(cfg, ServiceSpec(trace=TRACE), units=1)
+    c8 = request_cost(cfg, ServiceSpec(trace=TRACE), units=8, tp=8)
+    assert 0 < c8 < c1
+
+
+def test_rho_targeted_arrival_rate():
+    cfg = get_config("qwen3-4b")
+    cost = request_cost(cfg, ServiceSpec(trace=TRACE), units=8, tp=8)
+    gen = make_load("azure-conv", rho=0.8, cost_s=cost, seed=0)
+    arr = gen.arrivals(20_000)
+    realized = len(arr) / arr[-1]
+    assert realized == pytest.approx(0.8 / cost, rel=0.05)
+
+
+# -------------------------------------------------------------- validation
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ArrivalSpec(process="uniform")
+    with pytest.raises(ValueError):
+        ArrivalSpec(qps=0.0)
+    with pytest.raises(ValueError):
+        ArrivalSpec(process="mmpp", burst_factor=0.5)
+    with pytest.raises(ValueError):
+        ServiceSpec(trace=TRACE, mix="pareto")
+    with pytest.raises(ValueError):
+        ServiceSpec(trace=TRACE, mix="mixture", p_heavy=1.0)
+    with pytest.raises(ValueError):
+        ServiceSpec(trace=TRACE, mix="mixture", heavy_mult=0.5)
+    with pytest.raises(TypeError):
+        make_load("azure-conv", bogus_knob=1)
+    with pytest.raises(ValueError):
+        make_load("azure-conv", rho=0.5)   # rho without cost_s
+
+
+# ------------------------------------------- seed-swept property checks
+@pytest.mark.parametrize("process", ARRIVAL_PROCESSES)
+@pytest.mark.parametrize("seed", range(5))
+def test_arrivals_strictly_increasing(process, seed):
+    arr = make_load("azure-conv", process=process, qps=20.0,
+                    seed=seed).arrivals(500)
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    assert (gaps > 0).all()
+    assert (arr > 0).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_generate_requests_well_formed(seed):
+    reqs = _gen(n=100, seed=seed, process="mmpp", mix="mixture")
+    assert [r.rid for r in reqs] == list(range(100))
+    assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in reqs)
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+
+
+def test_rid_base_offsets_ids():
+    reqs = LoadGenerator(LoadSpec(seed=0)).generate(5, rid_base=100)
+    assert [r.rid for r in reqs] == [100, 101, 102, 103, 104]

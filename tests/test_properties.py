@@ -134,3 +134,33 @@ def test_rope_relative_position_property(B, S, seed):
     s2 = jnp.einsum("bshd,bthd->bhst", apply_rope(q, pos + 37, 1e4),
                     apply_rope(k, pos + 37, 1e4))
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+# --------------------------------------------------- stochastic load gen
+@FAST
+@given(seed=st.integers(0, 2**31 - 1), qps=st.floats(0.1, 100.0),
+       process=st.sampled_from(["poisson", "mmpp"]))
+def test_loadgen_gaps_positive_any_seed(seed, qps, process):
+    """Arrival sequences are strictly increasing (all gaps > 0) for every
+    process, seed and rate — the open-loop generator never stalls or goes
+    backwards in time."""
+    from repro.serving.loadgen import make_load
+    arr = make_load("azure-conv", process=process, qps=qps,
+                    seed=seed).arrivals(50)
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    assert (gaps > 0).all()
+
+
+@FAST
+@given(seed=st.integers(0, 2**31 - 1),
+       p_heavy=st.floats(0.0, 0.9), heavy_mult=st.floats(1.0, 32.0))
+def test_loadgen_lengths_within_spec_bounds(seed, p_heavy, heavy_mult):
+    """Generated lengths always respect the TraceSpec clip bounds, for any
+    mixture parameterisation."""
+    from repro.serving.loadgen import make_load
+    from repro.serving.traces import TRACES
+    spec = TRACES["azure-conv"]
+    isl, osl = make_load("azure-conv", mix="mixture", p_heavy=p_heavy,
+                         heavy_mult=heavy_mult, seed=seed).lengths(64)
+    assert (8 <= isl).all() and (isl <= spec.max_isl).all()
+    assert (1 <= osl).all() and (osl <= spec.max_osl).all()

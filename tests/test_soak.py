@@ -1,0 +1,189 @@
+"""Invariant soak suite (ISSUE 10): a seeded stochastic trace pushed
+through the sync engine, the async engine and the elastic cluster, pinning
+the invariants that must survive heavy traffic:
+
+  * sync-vs-async token parity on the same loadgen trace;
+  * ``host_syncs <= super_iterations`` (the async dispatch contract);
+  * the KV pool fully drains after completion — zero used pages, zero
+    HBM_ACTIVE pages (and all-FREE with the prefix cache off);
+  * every REJECTED request has a matching reject finish event and vice
+    versa — no silent drops;
+  * elastic scale-down drains lose no requests (ClusterSim leg here; the
+    real-router leg and sim-vs-real decision parity live in
+    test_elastic.py);
+  * percentile summary edge cases (empty / single sample) and the p999
+    tail keys.
+
+The quick legs run on every CI push; the long soak is marked slow.
+"""
+import math
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.transformer import Model
+from repro.serving.async_engine import AsyncDuetEngine, FinishEvent
+from repro.serving.engine import DuetEngine, EngineConfig
+from repro.serving.kvcache import PageTier
+from repro.serving.loadgen import make_load
+from repro.serving.request import (Phase, Request, ServingMetrics, _pct)
+from repro.serving.router import ElasticConfig
+from repro.serving.simulator import (ClusterSim, SimConfig,
+                                     make_duet_instance)
+
+CFG = reduced(get_config("qwen3-4b"))
+EC = dict(max_slots=4, max_len=256, token_budget=64)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = Model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _soak_trace(n, seed=0, max_len=256):
+    """Seeded bursty heavy-tail trace, clamped into engine capacity the
+    same way serve.py does (prompt cap max_len//2, output cap max_len//4)."""
+    reqs = make_load("azure-conv", process="mmpp", mix="mixture", qps=20.0,
+                     seed=seed).generate(n)
+    p_cap, o_cap = max_len // 2, max_len // 4
+    for r in reqs:
+        r.prompt_len = min(r.prompt_len, p_cap)
+        r.output_len = min(r.output_len, o_cap)
+    return reqs
+
+
+def _toks(metrics):
+    return {r.rid: [int(t) for t in r.output_tokens]
+            for r in metrics.requests}
+
+
+def _run_async(model, params, reqs, **ec_kw):
+    eng = AsyncDuetEngine(model, params, EngineConfig(**{**EC, **ec_kw}),
+                          seed=0)
+    eng.submit(reqs)
+    events = list(eng.events())
+    return eng, eng.run(), events
+
+
+def _soak_assertions(eng, metrics, events, n_req):
+    # async dispatch contract: at most one blocking fetch per super-iter
+    assert eng.dstats.host_syncs <= eng.dstats.super_iterations
+    # KV pool fully drained: nothing active, nothing leaked
+    assert eng.kv_mgr.used_pages == 0
+    assert eng.kv_mgr.tier_counts()[PageTier.HBM_ACTIVE] == 0
+    # terminal-outcome completeness: one finish event per request, and
+    # REJECTED phases pair exactly with reject finish events
+    fins = {e.rid: e for e in events if isinstance(e, FinishEvent)}
+    assert set(fins) == {r.rid for r in metrics.requests}
+    rejected = {r.rid for r in metrics.requests
+                if r.phase == Phase.REJECTED}
+    assert rejected == {rid for rid, e in fins.items()
+                        if e.reason.startswith("rejected")}
+    assert metrics.summary()["num_requests"] == n_req
+
+
+# ----------------------------------------------------------- engine legs
+def test_sync_vs_async_parity_on_stochastic_trace(model_params):
+    model, params = model_params
+    reqs = _soak_trace(8)
+    sync = DuetEngine(model, params, EngineConfig(**EC), seed=0)
+    sync.submit(_soak_trace(8))
+    sync_m = sync.run()
+    eng, async_m, events = _run_async(model, params, reqs)
+    assert _toks(async_m) == _toks(sync_m)
+    assert async_m.summary()["num_finished"] == 8
+    _soak_assertions(eng, async_m, events, 8)
+    # sync KV pool drains too
+    assert sync.kv_mgr.used_pages == 0
+
+
+def test_pool_all_free_without_prefix_cache(model_params):
+    model, params = model_params
+    eng, m, events = _run_async(model, params, _soak_trace(6),
+                                prefix_cache=False)
+    _soak_assertions(eng, m, events, 6)
+    # no cache to retain pages: every page returns to FREE
+    tiers = eng.kv_mgr.tier_counts()
+    assert tiers[PageTier.FREE] == eng.kv_mgr.pool.num_pages - 1
+    assert tiers[PageTier.HBM_CACHED] == 0
+
+
+def test_rejects_always_paired_with_events(model_params):
+    model, params = model_params
+    # unclamped heavy-tail trace: most requests exceed the tiny engine
+    reqs = make_load("azure-conv", mix="mixture", qps=20.0,
+                     seed=1).generate(6)
+    eng, m, events = _run_async(model, params, reqs)
+    assert m.summary()["num_rejected"] >= 1
+    _soak_assertions(eng, m, events, 6)
+
+
+@pytest.mark.slow
+def test_long_soak(model_params):
+    model, params = model_params
+    reqs = _soak_trace(40, seed=2)
+    sync = DuetEngine(model, params, EngineConfig(**EC), seed=0)
+    sync.submit(_soak_trace(40, seed=2))
+    sync_m = sync.run()
+    eng, async_m, events = _run_async(model, params, reqs)
+    assert _toks(async_m) == _toks(sync_m)
+    _soak_assertions(eng, async_m, events, 40)
+
+
+# ------------------------------------------------------------ elastic leg
+def test_elastic_cluster_drains_lose_nothing():
+    # the calibrated load_sweep geometry: thresholds inside the observed
+    # outstanding-token band so both directions fire
+    cfg = get_config("qwen3-4b")
+    reqs = make_load("azure-conv", process="mmpp", qps=2.19,
+                     burst_factor=6.0, mean_burst_s=20.0, mean_calm_s=40.0,
+                     seed=0).generate(60)
+    rids = {r.rid for r in reqs}
+    sim = ClusterSim(
+        lambda i: make_duet_instance(cfg, SimConfig(units=1, tp=1),
+                                     token_budget=8192),
+        n=2, policy="least-loaded",
+        elastic=ElasticConfig(min_replicas=1, max_replicas=2,
+                              scale_up_tokens=600, scale_down_tokens=250,
+                              cooldown_s=5.0, check_interval=1.0))
+    m = sim.run(reqs)
+    ups = [e for e in sim.scale_events if e.action == "up"]
+    downs = [e for e in sim.scale_events if e.action == "down"]
+    assert len(ups) >= 1 and len(downs) >= 1
+    # drains lose nothing: every submitted rid finishes exactly once
+    finished = [r.rid for r in m.requests if r.finish_time is not None]
+    assert sorted(finished) == sorted(rids)
+    assert m.summary()["num_finished"] == 60
+    # scale-down drains requeue through dispatch: the decision log holds
+    # one entry per original route plus one per requeued request
+    requeued = sum(e.requeued for e in sim.scale_events)
+    assert len(sim.decisions) == 60 + requeued
+    # replica 0 is never drained
+    assert all(e.replica != 0 for e in downs)
+
+
+# ----------------------------------------------------- metrics tail pins
+def test_pct_empty_is_nan():
+    assert math.isnan(_pct([], 0.5))
+    s = ServingMetrics().summary()
+    for k in ("p50_ttft_s", "p999_ttft_s", "p50_tbt_s", "p999_tbt_s"):
+        assert math.isnan(s[k])
+
+
+def test_pct_single_sample_every_percentile():
+    for p in (0.5, 0.95, 0.99, 0.999):
+        assert _pct([3.25], p) == 3.25
+
+
+def test_summary_p999_keys_present_and_ordered():
+    r = Request(rid=0, arrival=0.0, prompt_len=4, output_len=50)
+    for i in range(50):
+        r.record_token(0.1 + 0.01 * i)
+    m = ServingMetrics(requests=[r], duration=1.0)
+    s = m.summary()
+    for which in ("ttft", "tbt"):
+        p50, p95, p99, p999 = (s[f"p{p}_{which}_s"]
+                               for p in (50, 95, 99, 999))
+        assert p50 <= p95 <= p99 <= p999
